@@ -1,0 +1,40 @@
+"""Benchmark 4 — packet payload codecs (paper Algorithm I hex vs production
+codecs): encode+decode wall time and wire size for a 1M-param vector.
+Derived: wire bytes per parameter and max abs reconstruction error."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.compression import make_codec
+
+
+def bench():
+    rng = np.random.default_rng(0)
+    vec = rng.standard_normal(1_000_000).astype(np.float32)
+    rows = []
+    for name in ("hex", "raw", "int8", "topk"):
+        codec = make_codec(name)
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            data = codec.encode(vec)
+            out = codec.decode(data)
+        us = (time.perf_counter() - t0) * 1e6 / reps
+        err = float(np.abs(
+            out[:vec.size] - vec).max()) if name != "topk" else float("nan")
+        rows.append((f"codecs/{name}", us,
+                     f"bytes_per_param={len(data)/vec.size:.2f}"
+                     f";max_err={err:.2e}"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

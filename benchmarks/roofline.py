@@ -1,0 +1,135 @@
+"""Benchmark 7 — roofline table from the multi-pod dry-run.
+
+Reads the dry-run JSON reports (results/dryrun*.json, later files override
+earlier per cell), derives the three roofline terms per (arch x shape x
+mesh), the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness, and the
+MFU bound = useful-FLOPs-at-bottleneck-speed / peak. Writes
+results/roofline.md for EXPERIMENTS.md §Roofline.
+
+Regenerate inputs with:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun.json
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+HINTS = {
+    ("compute", "moe"): "cut dense-all-experts waste: sorted/ragged dispatch "
+                        "computes only top-k experts",
+    ("collective", "moe"): "per-expert-scan weight collectives dominate; "
+                           "EP all-to-all dispatch or expert-replicated "
+                           "weights remove the per-step gathers",
+    ("memory", "train"): "activation traffic: raise arithmetic intensity "
+                         "(fused attention kernel, larger microbatch)",
+    ("memory", "decode"): "KV-cache reads dominate; int8 KV cache or "
+                          "grouped-query kernel halves bytes",
+    ("memory", "prefill"): "attention score materialization; flash/chunked "
+                           "attention keeps tiles in VMEM",
+    ("collective", "train"): "grad all-reduce / SP all-gathers; overlap with "
+                             "backward compute, int8-compress cross-pod "
+                             "reduce",
+    ("collective", "decode"): "sharded-KV softmax combine; shard_map "
+                              "flash-decode with single LSE all-reduce",
+}
+
+
+def load_cells() -> dict:
+    cells = {}
+    for path in sorted(glob.glob("results/dryrun*.json")):
+        try:
+            with open(path) as f:
+                for rec in json.load(f):
+                    cells[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+        except (json.JSONDecodeError, KeyError):
+            continue
+    return cells
+
+
+def derive(rec: dict) -> dict:
+    terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+             "collective": rec["collective_s"]}
+    bottleneck = max(terms.values()) or 1e-30
+    n = rec["num_devices"] or 1
+    useful_per_dev = rec["model_flops_global"] / n
+    mfu_bound = useful_per_dev / PEAK_FLOPS / bottleneck
+    mode = ("train" if rec["shape"].startswith("train") else
+            "prefill" if rec["shape"].startswith("prefill") else "decode")
+    fam = ("moe" if "moe" in rec["arch"] or "olmoe" in rec["arch"] else mode)
+    hint = HINTS.get((rec["dominant"], "moe")) if fam == "moe" else None
+    hint = hint or HINTS.get((rec["dominant"], mode), "")
+    return {"bottleneck_s": bottleneck, "mfu_bound": mfu_bound,
+            "hint": hint, **terms}
+
+
+def render_markdown(cells: dict) -> str:
+    lines = [
+        "| arch | shape | mesh | GiB/dev | compute_s | memory_s | "
+        "collective_s | dominant | MODEL_FLOPs | useful/HLO | MFU bound | "
+        "next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(cells):
+        r = cells[key]
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | — | skipped | — | — | — | "
+                         f"{r['error'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | | | | | | | | {r['error'][:60]} |")
+            continue
+        d = derive(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['bytes_per_device']/2**30:.1f} | "
+            f"{d['compute']:.3e} | {d['memory']:.3e} | "
+            f"{d['collective']:.3e} | {r['dominant']} | "
+            f"{r['model_flops_global']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{d['mfu_bound']*100:.1f}% | {d['hint'][:70]} |")
+    return "\n".join(lines)
+
+
+def bench():
+    cells = load_cells()
+    rows = []
+    if not cells:
+        return [("roofline/missing_inputs", 0.0,
+                 "run repro.launch.dryrun first")]
+    ok = [c for c in cells.values() if c["status"] == "ok"]
+    md = render_markdown(cells)
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write(md + "\n")
+    for key in sorted(cells):
+        r = cells[key]
+        if r["status"] != "ok":
+            continue
+        d = derive(r)
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                     0.0,
+                     f"dominant={r['dominant']}"
+                     f";mfu_bound={d['mfu_bound']*100:.1f}%"
+                     f";useful_ratio={r['useful_ratio']:.2f}"
+                     f";mem_gib={r['bytes_per_device']/2**30:.1f}"))
+    rows.append(("roofline/summary", 0.0,
+                 f"cells_ok={len(ok)}"
+                 f";table=results/roofline.md"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure (+ roofline).
+
+  PYTHONPATH=src python -m benchmarks.run              # all
+  PYTHONPATH=src python -m benchmarks.run --only codecs
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (aggregation, codecs, fl_convergence, kernels_bench,
+                        roofline, transport_comparison, transport_scenarios)
+
+SUITES = {
+    "transport_scenarios": transport_scenarios,
+    "transport_comparison": transport_comparison,
+    "fl_convergence": fl_convergence,
+    "codecs": codecs,
+    "aggregation": aggregation,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        t0 = time.perf_counter()
+        try:
+            for row, us, derived in mod.bench():
+                print(f"{row},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001 - a suite failure is a row
+            print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}:{e}")
+        print(f"{name}/suite_wall,"
+              f"{(time.perf_counter()-t0)*1e6:.0f},complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark 2 — TCP vs UDP vs Modified UDP (the paper's future-work
+comparison): one FL round of a 40k-param model on the paper topology, swept
+over loss rates. Derived: simulated round time, delivered clients, global
+model L2 corruption vs lossless."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BernoulliLoss, FederatedSystem, FLClient, FLConfig,
+                        Link, Simulator, TransportConfig)
+from repro.core.packetizer import flatten_to_vector
+
+SERVER = "10.1.2.5"
+
+
+def _const_train(value):
+    def fn(params, round_idx, client):
+        return {k: np.full_like(v, value) for k, v in params.items()}, {}
+    return fn
+
+
+def run(transport: str, p_loss: float, seed: int = 0):
+    sim = Simulator()
+    params = {"w": np.zeros((40_000,), np.float32)}
+    clients = []
+    for i in range(2):
+        addr = f"10.1.2.{10 + i}"
+        sim.connect(addr, SERVER,
+                    Link(1e8, 5_000_000, BernoulliLoss(p=p_loss,
+                                                       seed=seed + i)),
+                    Link(1e8, 5_000_000))
+        clients.append(FLClient(addr, _const_train(float(i + 1)),
+                                train_time_ns=1_000_000))
+    cfg = FLConfig(aggregation="fedavg", broadcast_model=False,
+                   transport=TransportConfig(kind=transport,
+                                             timeout_ns=2_000_000_000,
+                                             udp_deadline_ns=3_000_000_000))
+    system = FederatedSystem(sim, SERVER, clients, params, cfg)
+    for c in clients:
+        c.params = params
+    res = system.run_round()
+    return system, res
+
+
+def bench():
+    clean, _ = run("mudp", 0.0)
+    target = flatten_to_vector(clean.global_params)
+    rows = []
+    for p in (0.0, 0.05, 0.2):
+        for tr in ("tcp", "udp", "mudp"):
+            t0 = time.perf_counter()
+            system, res = run(tr, p)
+            wall_us = (time.perf_counter() - t0) * 1e6
+            err = float(np.linalg.norm(
+                flatten_to_vector(system.global_params) - target))
+            rows.append((f"transport_comparison/{tr}_p{p:g}", wall_us,
+                         f"sim_s={res.duration_ns/1e9:.3f}"
+                         f";arrived={len(res.arrived)}"
+                         f";retx={res.retransmissions}"
+                         f";l2err={err:.3f}"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark 1 — paper §V test cases (Figs 5-7), quantified.
+
+For each scenario: simulated transaction duration, data packets sent,
+retransmissions, NACKs, and timer-path retries. The paper reports ~17.5 s
+for the triple-loss case on its 5 Mbps / 2000 ms link; the same scenario
+lands in that band here.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.channel import DropList, Link, NoLoss
+from repro.core.mudp import MudpReceiver, MudpSender
+from repro.core.packetizer import packetize, reassemble
+from repro.core.simulator import Simulator
+
+CLIENT, SERVER = "10.1.2.4", "10.1.2.5"
+RATE, DELAY = 5_000_000.0, 2_000_000_000
+
+
+def run_case(drops):
+    sim = Simulator()
+    sim.connect(CLIENT, SERVER, Link(RATE, DELAY, DropList(drops)),
+                Link(RATE, DELAY))
+    data = bytes(range(256)) * 18  # ~4.6KB -> 4 packets at MTU 1228
+    pkts = packetize(data, CLIENT, mtu=1228)
+    assert len(pkts) == 4
+    got, ok = {}, {}
+    rx = MudpReceiver(sim, sim.node(SERVER),
+                      on_deliver=lambda a, t, p: got.update(p))
+    tx = MudpSender(sim, sim.node(CLIENT), sim.node(SERVER), pkts,
+                    timeout_ns=6_000_000_000,
+                    on_complete=lambda s: ok.update(v=True))
+    tx.start()
+    sim.run()
+    assert ok.get("v") and reassemble(got) == data
+    return tx, rx
+
+
+def bench():
+    rows = []
+    cases = {
+        "tc1_drop_pkt2": {(2, 0)},
+        "tc2_drop_tail": {(2, 0), (3, 0), (4, 0)},
+        "tc3_lossless": set(),
+    }
+    for name, drops in cases.items():
+        t0 = time.perf_counter()
+        tx, rx = run_case(drops)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"transport_scenarios/{name}", wall_us,
+                     f"sim_s={tx.stats.duration_ns/1e9:.2f}"
+                     f";retx={tx.stats.retransmissions}"
+                     f";nacks={rx.stats_nacks_sent}"
+                     f";timer_retries={tx.stats.last_packet_retries}"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""End-to-end driver: federated training of a language model over the
+Modified UDP transport.
+
+Each FL client is a (simulated) pod training an LM on its own data shard;
+between rounds, model deltas are packetized, int8-compressed with error
+feedback, and shipped through lossy WAN links with the paper's MUDP
+reliability. The server runs weighted FedAvg, checkpoints every round, and a
+straggler deadline keeps slow clients from stalling the fleet.
+
+Default is a CPU-friendly ~1M-param xLSTM so the example finishes in
+minutes; ``--scale 100m`` instantiates a ~100M-param model for a real run
+(same code path).
+
+  PYTHONPATH=src python examples/fl_train_lm.py --rounds 6 --clients 3
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, FLJournal
+from repro.configs import get_config, smoke_variant
+from repro.core import (BernoulliLoss, FederatedSystem, FLClient, FLConfig,
+                        Link, Simulator, TransportConfig, WAN_LINK)
+from repro.data import federated_partitions
+from repro.models import model as M
+from repro.optim import AdamW, constant
+
+SERVER = "10.0.0.1"
+
+
+def model_config(scale: str):
+    base = smoke_variant(get_config("xlstm-350m"))
+    if scale == "tiny":
+        return base
+    if scale == "100m":
+        return dataclasses.replace(
+            base, num_layers=16, d_model=640, num_heads=4, head_dim=160,
+            vocab_size=50304, slstm_every=8)
+    raise ValueError(scale)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--scale", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--loss-rate", type=float, default=0.05)
+    ap.add_argument("--codec", default="int8",
+                    choices=["raw", "hex", "int8", "topk"])
+    ap.add_argument("--non-iid", type=float, default=0.3)
+    ap.add_argument("--straggler", action="store_true",
+                    help="make the last client 10x slower + round deadline")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = model_config(args.scale)
+    n_params = None
+    opt = AdamW(schedule=constant(2e-3), weight_decay=0.0)
+    loss_fn = M.loss_fn(cfg, remat_policy="none")
+
+    @jax.jit
+    def local_step(state, batch):
+        step = M.make_train_step(cfg, opt)
+        return step(state, batch)
+
+    pipes = federated_partitions(cfg.vocab_size, 64, 8, args.clients,
+                                 seed=0, non_iid=args.non_iid)
+
+    def make_train_fn(idx):
+        def train(params, round_idx, client):
+            state = (jnp.zeros((), jnp.int32), params, opt.init(params))
+            from repro.optim import TrainState
+            state = TrainState(*state)
+            losses = []
+            for s in range(args.local_steps):
+                batch = pipes[idx].batch(round_idx * args.local_steps + s)
+                state, metrics = local_step(state, batch)
+                losses.append(float(metrics["loss"]))
+            return state.params, {"first_loss": losses[0],
+                                  "last_loss": losses[-1]}
+        return train
+
+    # WAN topology with IID Bernoulli loss on every uplink.
+    sim = Simulator()
+    clients = []
+    for i in range(args.clients):
+        addr = f"10.0.1.{10 + i}"
+        up = Link(WAN_LINK["data_rate_bps"], WAN_LINK["delay_ns"],
+                  BernoulliLoss(p=args.loss_rate, seed=i))
+        down = Link(WAN_LINK["data_rate_bps"], WAN_LINK["delay_ns"])
+        sim.connect(addr, SERVER, up, down)
+        tt = 2_000_000_000 * (10 if (args.straggler
+                                     and i == args.clients - 1) else 1)
+        clients.append(FLClient(addr, make_train_fn(i), train_time_ns=tt,
+                                weight=1.0))
+
+    global_params = M.init(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(np.asarray(l).shape))
+                   for l in jax.tree_util.tree_leaves(global_params))
+    print(f"model: {cfg.name}-derived, {n_params/1e6:.1f}M params, "
+          f"{args.clients} clients, codec={args.codec}, "
+          f"loss_rate={args.loss_rate}")
+
+    fl_cfg = FLConfig(
+        aggregation="fedavg",
+        send_deltas=True,
+        error_feedback=(args.codec in ("int8", "topk")),
+        transport=TransportConfig(kind="mudp", codec=args.codec, mtu=9000,
+                                  timeout_ns=3_000_000_000, max_retries=3),
+        round_deadline_ns=(90_000_000_000 if args.straggler else None),
+    )
+    system = FederatedSystem(sim, SERVER, clients, global_params, fl_cfg)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="fl_ckpt_")
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+    journal = FLJournal(os.path.join(ckpt_dir, "journal.jsonl"))
+
+    def on_round_end(result, params):
+        path = mgr.save(result.round_idx, params,
+                        {"round": result.round_idx})
+        journal.round_finalized(result.round_idx, path, result.arrived,
+                                result.failed)
+
+    system.on_round_end = on_round_end
+
+    eval_pipe = federated_partitions(cfg.vocab_size, 64, 16, 1, seed=77)[0]
+    eval_batch = eval_pipe.batch(0)
+
+    def eval_nll(params):
+        return float(loss_fn(params, {k: jnp.asarray(v)
+                                      for k, v in eval_batch.items()}))
+
+    print(f"round -: eval NLL {eval_nll(system.global_params):.4f} "
+          f"(ln V = {np.log(cfg.vocab_size):.2f})")
+    for r in range(args.rounds):
+        journal.round_started(r, [c.addr for c in clients])
+        res = system.run_round()
+        nll = eval_nll(system.global_params)
+        print(f"round {r}: t={res.duration_ns/1e9:7.2f}s  "
+              f"arrived={len(res.arrived)}/{args.clients} "
+              f"retx={res.retransmissions:3d} "
+              f"wire={res.bytes_sent/1e6:7.1f}MB  eval NLL {nll:.4f}",
+              flush=True)
+
+    print(f"\ncheckpoints + journal in {ckpt_dir}")
+    print(f"resume round would be: {journal.resume_round()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Transport ablation: TCP vs UDP vs Modified UDP across loss rates — the
+comparison the paper's future-work section calls for.
+
+For each (transport, loss rate): one FL round of a small model over the
+paper's 3-node topology. Reports round completion time, delivered fraction,
+wire bytes, and global-model corruption (L2 error vs the lossless result).
+
+  PYTHONPATH=src python examples/transport_ablation.py
+"""
+
+import sys
+
+import numpy as np
+
+from repro.core import (BernoulliLoss, FederatedSystem, FLClient, FLConfig,
+                        Link, Simulator, TransportConfig)
+from repro.core.packetizer import flatten_to_vector
+
+SERVER = "10.1.2.5"
+
+
+def const_train(value):
+    def fn(params, round_idx, client):
+        return {k: np.full_like(v, value) for k, v in params.items()}, {}
+    return fn
+
+
+def run(transport: str, p_loss: float, seed: int = 0):
+    sim = Simulator()
+    params = {"w": np.zeros((40_000,), np.float32)}
+    clients = []
+    for i in range(2):
+        addr = f"10.1.2.{10 + i}"
+        up = Link(1e8, 5_000_000, BernoulliLoss(p=p_loss, seed=seed + i))
+        sim.connect(addr, SERVER, up, Link(1e8, 5_000_000))
+        clients.append(FLClient(addr, const_train(float(i + 1)),
+                                train_time_ns=1_000_000))
+    cfg = FLConfig(
+        aggregation="fedavg",
+        transport=TransportConfig(kind=transport, timeout_ns=2_000_000_000,
+                                  udp_deadline_ns=3_000_000_000),
+        broadcast_model=False,
+    )
+    system = FederatedSystem(sim, SERVER, clients, params, cfg)
+    for c in clients:
+        c.params = params
+    res = system.run_round()
+    return system, res
+
+
+def main() -> int:
+    clean, _ = run("mudp", 0.0)
+    target = flatten_to_vector(clean.global_params)
+
+    print(f"{'transport':>9s} {'loss':>5s} {'t_round(s)':>10s} "
+          f"{'arrived':>7s} {'retx':>5s} {'wireMB':>7s} {'L2err':>9s}")
+    for p in (0.0, 0.05, 0.2):
+        for tr in ("tcp", "udp", "mudp"):
+            system, res = run(tr, p)
+            vec = flatten_to_vector(system.global_params)
+            err = float(np.linalg.norm(vec - target))
+            print(f"{tr:>9s} {p:5.2f} {res.duration_ns/1e9:10.3f} "
+                  f"{len(res.arrived)}/2{'':>3s} {res.retransmissions:5d} "
+                  f"{res.bytes_sent/1e6:7.2f} {err:9.4f}")
+    print("\nUDP corrupts the global model as loss rises (zero-filled gaps);"
+          "\nTCP recovers but pays handshake+windowing latency; MUDP "
+          "recovers at near-UDP latency.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

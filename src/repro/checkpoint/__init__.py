@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (CheckpointManager, load_pytree,
+                                           save_pytree)
+from repro.checkpoint.journal import FLJournal
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree", "FLJournal"]

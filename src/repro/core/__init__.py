@@ -1,0 +1,33 @@
+"""Core paper contribution: Modified UDP transport + FL orchestration."""
+
+from repro.core.aggregation import fedavg, pairwise_average, trimmed_mean
+from repro.core.channel import (BernoulliLoss, DropList, GilbertElliott, Link,
+                                NoLoss, DCN_LINK, PAPER_LINK, WAN_LINK)
+from repro.core.compression import (Codec, HexCodec, Int8Codec, RawCodec,
+                                    TopKCodec, make_codec)
+from repro.core.mudp import MudpReceiver, MudpSender, TxnStats
+from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
+                                   reassemble, unflatten_from_vector)
+from repro.core.packets import (Packet, PacketKind, make_ack_ok,
+                                make_data_packet, make_nack)
+from repro.core.rounds import (FederatedSystem, FLClient, FLConfig,
+                               RoundResult, TransportConfig)
+from repro.core.simulator import Node, Simulator
+from repro.core.tcp import TcpReceiver, TcpSender
+from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
+
+__all__ = [
+    "fedavg", "pairwise_average", "trimmed_mean",
+    "BernoulliLoss", "DropList", "GilbertElliott", "Link", "NoLoss",
+    "DCN_LINK", "PAPER_LINK", "WAN_LINK",
+    "Codec", "HexCodec", "Int8Codec", "RawCodec", "TopKCodec", "make_codec",
+    "MudpReceiver", "MudpSender", "TxnStats",
+    "Packetizer", "flatten_to_vector", "packetize", "reassemble",
+    "unflatten_from_vector",
+    "Packet", "PacketKind", "make_ack_ok", "make_data_packet", "make_nack",
+    "FederatedSystem", "FLClient", "FLConfig", "RoundResult",
+    "TransportConfig",
+    "Node", "Simulator",
+    "TcpReceiver", "TcpSender",
+    "UdpReceiver", "UdpSender", "reassemble_partial",
+]

@@ -1,0 +1,131 @@
+"""Channel models for the discrete-event network simulator.
+
+A link is (data_rate, propagation_delay, loss model). The paper's NS3 setup is
+5 Mbps with a 2000 ms delay; that is `PAPER_LINK`. Production presets model
+DCN/WAN-class cross-pod links.
+
+Loss models are deterministic given a seed (or an explicit drop predicate), so
+every test and benchmark replays bit-for-bit — the NS3-equivalent of a fixed
+RngSeedManager seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Iterable, Optional
+
+from repro.core.packets import Packet, PacketKind
+
+NS_PER_SEC = 1_000_000_000
+
+
+# --------------------------------------------------------------------------
+# Loss models
+# --------------------------------------------------------------------------
+class LossModel:
+    """Decides whether a given transmission of a packet is dropped."""
+
+    def drops(self, pkt: Packet) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class NoLoss(LossModel):
+    def drops(self, pkt: Packet) -> bool:
+        return False
+
+
+@dataclasses.dataclass
+class DropList(LossModel):
+    """Drop exact (seq, attempt) pairs — reproduces the paper's test cases,
+    where the client 'deliberately skips' specific sequence numbers on the
+    first transmission only.
+
+    ``drops_on`` entries are ``(seq, attempt)``; attempt 0 is the initial
+    transmission. DATA packets only — control packets always pass (as in the
+    paper's scenarios).
+    """
+
+    drops_on: frozenset
+
+    def __init__(self, pairs: Iterable[tuple[int, int]]):
+        self.drops_on = frozenset(pairs)
+
+    def drops(self, pkt: Packet) -> bool:
+        if pkt.kind != PacketKind.DATA:
+            return False
+        return (pkt.seq, pkt.attempt) in self.drops_on
+
+
+@dataclasses.dataclass
+class BernoulliLoss(LossModel):
+    """IID loss with probability ``p``, deterministic per (txn, seq, attempt,
+    kind) so replays are stable regardless of event interleaving."""
+
+    p: float
+    seed: int = 0
+    drop_control: bool = False  # whether ACK/NACK packets can also be lost
+
+    def drops(self, pkt: Packet) -> bool:
+        if self.p <= 0.0:
+            return False
+        if not self.drop_control and pkt.kind != PacketKind.DATA:
+            return False
+        key = (self.seed, pkt.txn, int(pkt.kind), pkt.seq, pkt.attempt)
+        return random.Random(hash(key)).random() < self.p
+
+
+@dataclasses.dataclass
+class GilbertElliott(LossModel):
+    """Two-state bursty loss (good/bad) — the standard WAN burst-loss model.
+
+    State advances per transmission attempt, keyed deterministically by a
+    per-packet hash so that the model is replayable; this is a mean-field
+    variant (per-packet independent two-state mixture) adequate for sweeps.
+    """
+
+    p_good_loss: float = 0.001
+    p_bad_loss: float = 0.3
+    p_bad: float = 0.05          # stationary probability of the bad state
+    seed: int = 0
+    drop_control: bool = False
+
+    def drops(self, pkt: Packet) -> bool:
+        if not self.drop_control and pkt.kind != PacketKind.DATA:
+            return False
+        key = (self.seed, pkt.txn, int(pkt.kind), pkt.seq, pkt.attempt)
+        rng = random.Random(hash(key))
+        bad = rng.random() < self.p_bad
+        return rng.random() < (self.p_bad_loss if bad else self.p_good_loss)
+
+
+# --------------------------------------------------------------------------
+# Links
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Link:
+    """Point-to-point link: serialization at ``data_rate_bps`` plus fixed
+    ``delay_ns`` propagation, with an attached loss model.
+
+    Serialization occupies the link (FIFO): back-to-back sends queue behind
+    each other, matching NS3 PointToPointNetDevice semantics.
+    """
+
+    data_rate_bps: float = 5_000_000.0       # paper: 5 Mbps
+    delay_ns: int = 2_000_000_000            # paper: 2000 ms
+    loss: LossModel = dataclasses.field(default_factory=NoLoss)
+    # Busy-until bookkeeping (owned by the simulator).
+    _busy_until_ns: int = 0
+
+    def serialization_ns(self, size_bytes: int) -> int:
+        return int(round(size_bytes * 8 * NS_PER_SEC / self.data_rate_bps))
+
+    def reset(self) -> None:
+        self._busy_until_ns = 0
+
+
+PAPER_LINK = dict(data_rate_bps=5_000_000.0, delay_ns=2_000_000_000)
+# Cross-pod DCN-class link: 25 Gbps effective per stream, 1 ms RTT/2.
+DCN_LINK = dict(data_rate_bps=25_000_000_000.0, delay_ns=500_000)
+# Cross-region WAN: 2 Gbps, 30 ms one-way.
+WAN_LINK = dict(data_rate_bps=2_000_000_000.0, delay_ns=30_000_000)

@@ -1,0 +1,261 @@
+"""The Modified UDP (MUDP) protocol — the paper's contribution (§IV.B).
+
+Sender
+  1. Sends the packets as required in quick succession.
+  2. Keeps all sent packets for possible resending on packet loss.
+  3. Starts a timer for determining when to resend:
+     - ACK ``(0, 0, A)`` -> all packets received, transaction completes.
+     - NACK ``(X, Np, A)`` with ``0 < X <= Np`` -> resend packet X.
+     - Timer expiry with no acknowledgement -> resend the LAST packet to make
+       the receiver report its missing sequences, with Y (=3) max retries.
+
+Receiver
+  1. Receives and stores all packets.
+  2. Once the last packet (``X == Np``) is received:
+     - all present -> ACK ``(0, 0, A)``, reconstruct the original payload,
+       proceed with federated learning, clear storage;
+     - gaps -> send a NACK per missing sequence number and start a timer for
+       resending the NACKs.
+
+The implementation is a pair of event-driven state machines over the
+discrete-event simulator. They are deliberately transport-only: bytes in,
+bytes out — the FL layer (``repro.core.rounds``) composes them with the
+packetizer and aggregation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.packets import (Packet, PacketKind, make_ack_ok, make_nack)
+from repro.core.simulator import Node, Simulator, Timer
+
+
+@dataclasses.dataclass
+class TxnStats:
+    """Per-transaction accounting surfaced to benchmarks/EXPERIMENTS.md."""
+
+    txn: int
+    total_packets: int = 0
+    start_ns: int = 0
+    end_ns: int = 0
+    data_sent: int = 0
+    retransmissions: int = 0
+    last_packet_retries: int = 0  # the paper's Y counter
+    nacks_sent: int = 0
+    nacks_received: int = 0
+    completed: bool = False
+    failed: bool = False
+
+    @property
+    def duration_ns(self) -> int:
+        return self.end_ns - self.start_ns
+
+
+class MudpSender:
+    """One transaction: ship ``packets`` to ``dest`` reliably."""
+
+    def __init__(self, sim: Simulator, node: Node, dest: Node,
+                 packets: list[Packet], *,
+                 timeout_ns: int = 6_000_000_000,
+                 max_retries: int = 3,
+                 on_complete: Optional[Callable[["MudpSender"], None]] = None,
+                 on_fail: Optional[Callable[["MudpSender"], None]] = None):
+        if not packets:
+            raise ValueError("empty transaction")
+        self.sim, self.node, self.dest = sim, node, dest
+        self.packets = {p.seq: p for p in packets}
+        self.total = packets[0].total
+        self.txn = packets[0].txn
+        self.timeout_ns = timeout_ns
+        self.max_retries = max_retries
+        self.on_complete = on_complete
+        self.on_fail = on_fail
+        self.stats = TxnStats(txn=self.txn, total_packets=self.total)
+        self._attempts: dict[int, int] = {s: 0 for s in self.packets}
+        self._timer: Optional[Timer] = None
+        self._done = False
+        node.register(self._on_packet)
+
+    # -- paper step 1: send in quick succession --------------------------
+    def start(self) -> None:
+        self.stats.start_ns = self.sim.now_ns
+        for seq in range(1, self.total + 1):
+            self._send(seq)
+        self._arm_timer()
+
+    def _send(self, seq: int) -> None:
+        pkt = dataclasses.replace(self.packets[seq],
+                                  attempt=self._attempts[seq])
+        self._attempts[seq] += 1
+        self.stats.data_sent += 1
+        if pkt.attempt > 0:
+            self.stats.retransmissions += 1
+        self.node.send(pkt, self.dest)
+
+    # -- paper step 3: the timer ------------------------------------------
+    def _arm_timer(self) -> None:
+        self._cancel_timer()
+        self._timer = self.sim.schedule(self.timeout_ns, self._on_timeout)
+
+    def _cancel_timer(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def _on_timeout(self) -> None:
+        if self._done:
+            return
+        if self.stats.last_packet_retries >= self.max_retries:
+            self._finish(failed=True)
+            return
+        # "the sender resends the last packets to inform the receiver of the
+        #  missing sequences with Y amount of maximum retries"
+        self.stats.last_packet_retries += 1
+        self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: timer expired, "
+                     f"resending last packet ({self.total}, {self.total}, "
+                     f"{self.node.addr}) retry "
+                     f"{self.stats.last_packet_retries}/{self.max_retries}")
+        self._send(self.total)
+        self._arm_timer()
+
+    # -- acknowledgement handling ------------------------------------------
+    def _on_packet(self, pkt: Packet) -> bool:
+        if self._done or pkt.txn != self.txn:
+            return False
+        if pkt.kind == PacketKind.ACK_OK:
+            # "(0, 0, A) ... all packets have been received and the
+            #  transaction completes."
+            self._finish(failed=False)
+            return True
+        if pkt.kind == PacketKind.NACK:
+            self.stats.nacks_received += 1
+            if 0 < pkt.seq <= self.total:
+                self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: NACK "
+                             f"for missing packet {pkt.seq}, resending")
+                self._send(pkt.seq)
+                self._arm_timer()
+            return True
+        return False
+
+    def _finish(self, *, failed: bool) -> None:
+        self._done = True
+        self.stats.end_ns = self.sim.now_ns
+        self.stats.completed = not failed
+        self.stats.failed = failed
+        self._cancel_timer()
+        self.node.unregister(self._on_packet)
+        cb = self.on_fail if failed else self.on_complete
+        if cb is not None:
+            cb(self)
+
+
+@dataclasses.dataclass
+class _RxState:
+    """Receiver-side storage for one in-flight transaction."""
+
+    total: int
+    sender_addr: str
+    received: dict[int, Packet] = dataclasses.field(default_factory=dict)
+    saw_last: bool = False
+    nack_rounds: int = 0
+    nack_timer: Optional[Timer] = None
+    first_ns: int = 0
+
+
+class MudpReceiver:
+    """Persistent receiver serving many senders/transactions (the FL server).
+
+    ``on_deliver(sender_addr, txn, packets)`` fires exactly once per completed
+    transaction with the full ``{seq: Packet}`` map.
+    """
+
+    def __init__(self, sim: Simulator, node: Node, *,
+                 nack_timeout_ns: int = 6_000_000_000,
+                 max_nack_retries: int = 3,
+                 on_deliver: Optional[
+                     Callable[[str, int, dict[int, Packet]], None]] = None):
+        self.sim, self.node = sim, node
+        self.nack_timeout_ns = nack_timeout_ns
+        self.max_nack_retries = max_nack_retries
+        self.on_deliver = on_deliver
+        self._rx: dict[tuple[str, int], _RxState] = {}
+        self._completed: set[tuple[str, int]] = set()
+        self.stats_nacks_sent = 0
+        node.register(self._on_packet)
+
+    def _on_packet(self, pkt: Packet) -> bool:
+        if pkt.kind != PacketKind.DATA:
+            return False
+        key = (pkt.addr, pkt.txn)
+        if key in self._completed:
+            # Sender missed our ACK and retried the last packet: re-ACK so it
+            # can terminate (at-least-once delivery of the completion signal).
+            self._send_ack(pkt.addr, pkt.txn)
+            return True
+        st = self._rx.get(key)
+        if st is None:
+            st = _RxState(total=pkt.total, sender_addr=pkt.addr,
+                          first_ns=self.sim.now_ns)
+            self._rx[key] = st
+        if not pkt.verify():
+            self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: checksum "
+                         f"fail on {pkt}, treating as lost")
+            return True
+        st.received[pkt.seq] = pkt
+        self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: got {pkt} "
+                     f"[{len(st.received)}/{st.total}]")
+        if pkt.is_last:
+            st.saw_last = True
+        if st.saw_last and not self._try_deliver(key, st) and pkt.is_last:
+            # Gap reporting happens only on last-packet arrival (including a
+            # timer-driven resend of it) or on the NACK timer — an interior
+            # retransmission that still leaves gaps must NOT re-NACK packets
+            # already in flight.
+            self._report_gaps(key, st)
+        return True
+
+    # -- paper receiver step 2 ---------------------------------------------
+    def _try_deliver(self, key: tuple[str, int], st: _RxState) -> bool:
+        missing = [s for s in range(1, st.total + 1) if s not in st.received]
+        if missing:
+            return False
+        if st.nack_timer is not None:
+            st.nack_timer.cancel()
+        self._completed.add(key)
+        packets = st.received
+        del self._rx[key]
+        self._send_ack(st.sender_addr, key[1])
+        if self.on_deliver is not None:
+            self.on_deliver(st.sender_addr, key[1], packets)
+        return True
+
+    def _report_gaps(self, key: tuple[str, int], st: _RxState) -> None:
+        missing = [s for s in range(1, st.total + 1) if s not in st.received]
+        # "If some packets are missing, send acknowledgements with sequence
+        #  numbers of only those missing packets."
+        for seq in missing:
+            self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: packet "
+                         f"{seq} is missing! requesting resend")
+            self.stats_nacks_sent += 1
+            self.node.send(make_nack(seq, st.total, self.node.addr, key[1]),
+                           self.sim.node(st.sender_addr))
+        # "Start the timer for determining when to resend the acknowledgement"
+        if st.nack_timer is not None:
+            st.nack_timer.cancel()
+        if st.nack_rounds < self.max_nack_retries:
+            st.nack_rounds += 1
+            st.nack_timer = self.sim.schedule(
+                self.nack_timeout_ns, lambda: self._on_nack_timeout(key))
+
+    def _on_nack_timeout(self, key: tuple[str, int]) -> None:
+        st = self._rx.get(key)
+        if st is not None and st.saw_last and not self._try_deliver(key, st):
+            self._report_gaps(key, st)
+
+    def _send_ack(self, dest_addr: str, txn: int) -> None:
+        # "(0, 0, A)" where A is the responder's address (Figs 5-7 show the
+        # server responding with (0, 0, 10.1.2.5)).
+        self.node.send(make_ack_ok(self.node.addr, txn),
+                       self.sim.node(dest_addr))

@@ -1,0 +1,458 @@
+"""Federated-learning round orchestration (paper Fig. 4, generalized).
+
+One round, per the paper: the server broadcasts the global model; each client
+trains locally; the client ships its weights to the server in packets over the
+Modified UDP; the server aggregates (Eq. 1) and the transport-level ACK
+``(0, 0, A_server)`` closes the client's transaction.
+
+Beyond the paper (required at thousand-node scale):
+ * round deadline -> straggler cutoff: aggregate whoever arrived (the paper's
+   timer, promoted from packet level to round level);
+ * async late-update buffer: a straggler's update that lands after the
+   deadline is folded into the NEXT round with a staleness discount;
+ * elastic client pool with health tracking (transport failures demote a
+   client; it is re-admitted after a cool-down);
+ * delta transmission + lossy codecs with error feedback;
+ * pluggable transport (mudp | udp | tcp) and aggregation
+   (pairwise | fedavg | trimmed_mean).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.compression import ErrorFeedback, make_codec
+from repro.core.mudp import MudpReceiver, MudpSender
+from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
+                                   unflatten_from_vector)
+from repro.core.simulator import Simulator
+from repro.core.tcp import TcpReceiver, TcpSender
+from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
+from repro.core import packetizer as pktz
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class TransportConfig:
+    kind: str = "mudp"                  # mudp | udp | tcp
+    codec: str = "raw"                  # raw | hex | int8 | topk
+    codec_kwargs: dict = dataclasses.field(default_factory=dict)
+    mtu: int = 1500
+    timeout_ns: int = 6_000_000_000     # sender/NACK timer (paper's timer)
+    max_retries: int = 3                # the paper's Y
+    udp_deadline_ns: int = 30_000_000_000
+
+
+@dataclasses.dataclass
+class FLConfig:
+    transport: TransportConfig = dataclasses.field(
+        default_factory=TransportConfig)
+    aggregation: str = "fedavg"          # pairwise (paper Eq.1) | fedavg | trimmed_mean
+    send_deltas: bool = False            # ship (trained - received) instead of weights
+    error_feedback: bool = False         # residual compensation for lossy codecs
+    broadcast_model: bool = True         # server->client downlink each round
+    round_deadline_ns: Optional[int] = None
+    server_lr: float = 1.0               # for delta aggregation
+    staleness_discount: float = 0.5      # late update weight *= discount^age
+    unhealthy_after_failures: int = 2
+    readmit_after_rounds: int = 2
+
+
+@dataclasses.dataclass
+class RoundResult:
+    round_idx: int
+    duration_ns: int
+    arrived: list[str]
+    failed: list[str]
+    skipped_unhealthy: list[str]
+    late_folded: int
+    bytes_sent: int
+    packets_sent: int
+    packets_dropped: int
+    retransmissions: int
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# Client
+# --------------------------------------------------------------------------
+class FLClient:
+    """One federated client.
+
+    ``train_fn(params, round_idx, client) -> (new_params, metrics)`` runs real
+    (JAX) local training; ``train_time_ns`` models how long that takes inside
+    the simulation (heterogeneous values create stragglers).
+    """
+
+    def __init__(self, addr: str, train_fn: Callable, *,
+                 train_time_ns: int = 1_000_000_000,
+                 weight: float = 1.0):
+        self.addr = addr
+        self.train_fn = train_fn
+        self.train_time_ns = train_time_ns
+        self.weight = weight
+        self.params: Any = None          # local copy of the global model
+        self.error_feedback = ErrorFeedback()
+        self.metrics_history: list[dict] = []
+
+
+class ClientPool:
+    """Elastic membership with health tracking."""
+
+    def __init__(self, clients: list[FLClient], *,
+                 unhealthy_after: int = 2, readmit_after: int = 2):
+        self.clients: dict[str, FLClient] = {c.addr: c for c in clients}
+        self.failures: dict[str, int] = {c.addr: 0 for c in clients}
+        self.benched_until: dict[str, int] = {}
+        self.unhealthy_after = unhealthy_after
+        self.readmit_after = readmit_after
+
+    def add(self, client: FLClient) -> None:
+        self.clients[client.addr] = client
+        self.failures[client.addr] = 0
+
+    def remove(self, addr: str) -> None:
+        self.clients.pop(addr, None)
+        self.failures.pop(addr, None)
+        self.benched_until.pop(addr, None)
+
+    def active(self, round_idx: int) -> list[FLClient]:
+        out = []
+        for addr, c in self.clients.items():
+            if self.benched_until.get(addr, -1) > round_idx:
+                continue
+            out.append(c)
+        return out
+
+    def benched(self, round_idx: int) -> list[str]:
+        return [a for a, r in self.benched_until.items() if r > round_idx]
+
+    def record_failure(self, addr: str, round_idx: int) -> None:
+        self.failures[addr] = self.failures.get(addr, 0) + 1
+        if self.failures[addr] >= self.unhealthy_after:
+            self.benched_until[addr] = round_idx + 1 + self.readmit_after
+            self.failures[addr] = 0
+
+    def record_success(self, addr: str) -> None:
+        self.failures[addr] = 0
+
+
+# --------------------------------------------------------------------------
+# The federated system
+# --------------------------------------------------------------------------
+class FederatedSystem:
+    """Server + clients + transport over one Simulator."""
+
+    def __init__(self, sim: Simulator, server_addr: str,
+                 clients: list[FLClient], global_params: Any,
+                 cfg: Optional[FLConfig] = None):
+        self.sim = sim
+        self.cfg = cfg or FLConfig()
+        self.server_addr = server_addr
+        self.server_node = sim.node(server_addr)
+        self.pool = ClientPool(
+            clients, unhealthy_after=self.cfg.unhealthy_after_failures,
+            readmit_after=self.cfg.readmit_after_rounds)
+        self.global_params = global_params
+        codec = make_codec(self.cfg.transport.codec,
+                           **self.cfg.transport.codec_kwargs)
+        self.packetizer = Packetizer(codec=codec, mtu=self.cfg.transport.mtu)
+        self.history: list[RoundResult] = []
+        self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
+
+        # Persistent receivers.
+        t = self.cfg.transport
+        if t.kind == "mudp":
+            self._server_rx = MudpReceiver(
+                sim, self.server_node, nack_timeout_ns=t.timeout_ns,
+                max_nack_retries=t.max_retries,
+                on_deliver=self._on_server_deliver)
+        elif t.kind == "udp":
+            self._server_rx = UdpReceiver(
+                sim, self.server_node, deadline_ns=t.udp_deadline_ns,
+                on_deliver=self._on_server_deliver_partial)
+        elif t.kind == "tcp":
+            self._server_rx = TcpReceiver(
+                sim, self.server_node, on_deliver=self._on_server_deliver)
+        else:
+            raise ValueError(f"unknown transport {t.kind}")
+        self._client_rx: dict[str, object] = {}
+        for c in clients:
+            self._install_client_rx(c)
+
+        # Per-round state.
+        self._round_idx = -1
+        self._roster: dict[str, FLClient] = {}
+        self._resolved: set[str] = set()
+        self._updates: dict[str, np.ndarray] = {}   # addr -> flat vector
+        self._late_buffer: list[tuple[int, str, np.ndarray]] = []
+        self._round_open = False
+        self._round_start_ns = 0
+        self._deadline_timer = None
+        self._failed: list[str] = []
+
+    # -- receiver plumbing ---------------------------------------------------
+    def _install_client_rx(self, client: FLClient) -> None:
+        t = self.cfg.transport
+        node = self.sim.node(client.addr)
+        cb = self._make_client_deliver(client)
+        if t.kind == "mudp":
+            rx = MudpReceiver(self.sim, node, nack_timeout_ns=t.timeout_ns,
+                              max_nack_retries=t.max_retries, on_deliver=cb)
+        elif t.kind == "udp":
+            rx = UdpReceiver(self.sim, node, deadline_ns=t.udp_deadline_ns,
+                             on_deliver=lambda a, x, p, tot:
+                             cb(a, x, p))  # best effort downlink
+        else:
+            rx = TcpReceiver(self.sim, node, on_deliver=cb)
+        self._client_rx[client.addr] = rx
+
+    def add_client(self, client: FLClient) -> None:
+        """Elastic join (between rounds)."""
+        self.pool.add(client)
+        self._install_client_rx(client)
+
+    def remove_client(self, addr: str) -> None:
+        self.pool.remove(addr)
+
+    # -- txn numbering ------------------------------------------------------
+    @staticmethod
+    def _txn_down(round_idx: int) -> int:
+        return round_idx * 2
+
+    @staticmethod
+    def _txn_up(round_idx: int) -> int:
+        return round_idx * 2 + 1
+
+    @staticmethod
+    def _round_of_txn(txn: int) -> int:
+        return txn // 2
+
+    # -- round driver ---------------------------------------------------------
+    def run_round(self, round_idx: Optional[int] = None) -> RoundResult:
+        self._round_idx = (self._round_idx + 1 if round_idx is None
+                           else round_idx)
+        r = self._round_idx
+        roster = self.pool.active(r)
+        self._roster = {c.addr: c for c in roster}
+        self._resolved = set()
+        self._updates = {}
+        self._failed = []
+        self._round_open = True
+        self._round_retx = 0
+        self._late_folded = 0
+        self._round_start_ns = self.sim.now_ns
+        stats0 = dict(self.sim.stats)
+
+        if self.cfg.round_deadline_ns is not None:
+            self._deadline_timer = self.sim.schedule(
+                self.cfg.round_deadline_ns, self._on_deadline)
+
+        for client in roster:
+            if self.cfg.broadcast_model:
+                self._broadcast_to(client)
+            else:
+                client.params = self.global_params
+                self._schedule_training(client)
+
+        self.sim.run()
+
+        if self._round_open:       # e.g. every client failed before deadline
+            self._finalize()
+
+        stats1 = self.sim.stats
+        result = RoundResult(
+            round_idx=r,
+            duration_ns=self.sim.now_ns - self._round_start_ns,
+            arrived=sorted(self._updates.keys()),
+            failed=list(self._failed),
+            skipped_unhealthy=self.pool.benched(r),
+            late_folded=self._late_folded,
+            bytes_sent=stats1["bytes_sent"] - stats0["bytes_sent"],
+            packets_sent=stats1["packets_sent"] - stats0["packets_sent"],
+            packets_dropped=(stats1["packets_dropped"]
+                             - stats0["packets_dropped"]),
+            retransmissions=self._round_retx,
+        )
+        self.history.append(result)
+        if self.on_round_end is not None:
+            self.on_round_end(result, self.global_params)
+        return result
+
+    def run_rounds(self, n: int) -> list[RoundResult]:
+        return [self.run_round() for _ in range(n)]
+
+    # -- downlink: server -> client -------------------------------------------
+    def _broadcast_to(self, client: FLClient) -> None:
+        packets = self.packetizer.to_packets(
+            self.global_params, self.server_addr, self._txn_down(self._round_idx))
+        self._make_sender(self.server_node, self.sim.node(client.addr),
+                          packets,
+                          on_fail=lambda s, a=client.addr:
+                          self._uplink_failed(a)).start()
+
+    def _make_client_deliver(self, client: FLClient):
+        def _cb(sender_addr: str, txn: int, packets: dict) -> None:
+            if self._round_of_txn(txn) != self._round_idx:
+                return
+            client.params = self.packetizer.from_packets(
+                packets, self.global_params)
+            self._schedule_training(client)
+        return _cb
+
+    # -- local training ------------------------------------------------------
+    def _schedule_training(self, client: FLClient) -> None:
+        def _train_done() -> None:
+            received = client.params
+            new_params, metrics = client.train_fn(
+                received, self._round_idx, client)
+            client.metrics_history.append(metrics)
+            payload_tree = (agg.tree_sub(new_params, received)
+                            if self.cfg.send_deltas else new_params)
+            client.params = new_params
+            self._send_update(client, payload_tree)
+        self.sim.schedule(client.train_time_ns, _train_done)
+
+    # -- uplink: client -> server -------------------------------------------
+    def _send_update(self, client: FLClient, payload_tree: Any) -> None:
+        vec = flatten_to_vector(payload_tree)
+        if self.cfg.error_feedback and not self.packetizer.codec.lossless:
+            comp = client.error_feedback.compensate(vec)
+            data = self.packetizer.codec.encode(comp)
+            decoded = self.packetizer.codec.decode(data)
+            client.error_feedback.update(comp, decoded)
+        else:
+            data = self.packetizer.codec.encode(vec)
+        packets = packetize(data, client.addr,
+                            self._txn_up(self._round_idx),
+                            self.packetizer.mtu)
+        node = self.sim.node(client.addr)
+        self._make_sender(
+            node, self.server_node, packets,
+            on_fail=lambda s, a=client.addr: self._uplink_failed(a)).start()
+
+    def _make_sender(self, src, dst, packets, on_fail=None):
+        t = self.cfg.transport
+        if t.kind == "mudp":
+            return MudpSender(self.sim, src, dst, packets,
+                              timeout_ns=t.timeout_ns,
+                              max_retries=t.max_retries,
+                              on_complete=self._note_retx,
+                              on_fail=lambda s: (self._note_retx(s),
+                                                 on_fail and on_fail(s)))
+        if t.kind == "udp":
+            return UdpSender(self.sim, src, dst, packets,
+                             on_complete=self._note_retx)
+        return TcpSender(self.sim, src, dst, packets,
+                         rto_ns=t.timeout_ns,
+                         on_complete=self._note_retx,
+                         on_fail=lambda s: (self._note_retx(s),
+                                            on_fail and on_fail(s)))
+
+    _round_retx = 0
+    _late_folded = 0
+
+    def _note_retx(self, sender) -> None:
+        self._round_retx += getattr(sender.stats, "retransmissions", 0)
+
+    # -- server-side delivery --------------------------------------------------
+    def _on_server_deliver(self, sender_addr: str, txn: int,
+                           packets: dict) -> None:
+        data = pktz.reassemble(packets)
+        self._ingest_update(sender_addr, txn, data)
+
+    def _on_server_deliver_partial(self, sender_addr: str, txn: int,
+                                   packets: dict, total: int) -> None:
+        data = reassemble_partial(packets, total)
+        self._ingest_update(sender_addr, txn, data)
+
+    def _ingest_update(self, sender_addr: str, txn: int, data: bytes) -> None:
+        n_expected = flatten_to_vector(self.global_params).size
+        try:
+            vec = self.packetizer.codec.decode(data)
+        except Exception:
+            vec = np.zeros(n_expected, dtype=np.float32)
+        if vec.size < n_expected:
+            vec = np.concatenate(
+                [vec, np.zeros(n_expected - vec.size, dtype=np.float32)])
+        vec = vec[:n_expected]
+
+        upd_round = self._round_of_txn(txn)
+        if upd_round != self._round_idx or not self._round_open:
+            # Straggler from a previous round: fold next round, discounted.
+            self._late_buffer.append((upd_round, sender_addr, vec))
+            return
+        self._updates[sender_addr] = vec
+        self.pool.record_success(sender_addr)
+        self._mark_resolved(sender_addr)
+
+    def _uplink_failed(self, addr: str) -> None:
+        if addr in self._roster and addr not in self._resolved:
+            self._failed.append(addr)
+            self.pool.record_failure(addr, self._round_idx)
+            self._mark_resolved(addr)
+
+    def _mark_resolved(self, addr: str) -> None:
+        self._resolved.add(addr)
+        if self._round_open and self._resolved >= set(self._roster):
+            self._finalize()
+
+    def _on_deadline(self) -> None:
+        if self._round_open:
+            self.sim.log(f"t={self.sim.now_ns}ns SERVER round "
+                         f"{self._round_idx} deadline -> straggler cutoff "
+                         f"({len(self._updates)}/{len(self._roster)} arrived)")
+            self._finalize()
+
+    # -- aggregation -----------------------------------------------------------
+    def _finalize(self) -> None:
+        self._round_open = False
+        if self._deadline_timer is not None:
+            self._deadline_timer.cancel()
+            self._deadline_timer = None
+
+        self._late_folded = 0
+        contribs: list[tuple[np.ndarray, float]] = []
+        for addr, vec in self._updates.items():
+            contribs.append((vec, self._roster[addr].weight))
+        for upd_round, addr, vec in self._late_buffer:
+            age = max(1, self._round_idx - upd_round)
+            w = (self.cfg.staleness_discount ** age)
+            client = self.pool.clients.get(addr)
+            contribs.append((vec, w * (client.weight if client else 1.0)))
+            self._late_folded += 1
+        self._late_buffer = []
+        if not contribs:
+            return
+
+        template = self.global_params
+        if self.cfg.send_deltas:
+            vecs = [v for v, _ in contribs]
+            ws = np.asarray([w for _, w in contribs], dtype=np.float32)
+            mean_delta = sum(w * v for v, w in zip(vecs, ws)) / ws.sum()
+            delta_tree = unflatten_from_vector(
+                mean_delta.astype(np.float32), template)
+            self.global_params = agg.apply_delta(
+                template, delta_tree, self.cfg.server_lr)
+            return
+
+        trees = [unflatten_from_vector(v, template) for v, _ in contribs]
+        weights = [w for _, w in contribs]
+        if self.cfg.aggregation == "pairwise":
+            # Paper Eq. 1: fold per arrival order.
+            g = self.global_params
+            for t in trees:
+                g = agg.pairwise_average(g, t)
+            self.global_params = g
+        elif self.cfg.aggregation == "fedavg":
+            self.global_params = agg.fedavg(trees, weights)
+        elif self.cfg.aggregation == "trimmed_mean":
+            self.global_params = agg.trimmed_mean(trees)
+        else:
+            raise ValueError(f"unknown aggregation {self.cfg.aggregation}")

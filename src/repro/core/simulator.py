@@ -1,0 +1,171 @@
+"""Deterministic discrete-event network simulator — the NS3 stand-in.
+
+Implements exactly what the paper uses NS3 for: a star topology of N client
+nodes around one server node, point-to-point links with a data rate, a
+propagation delay and a loss model, an event calendar in integer nanoseconds,
+and cancellable timers (NS3 ``Simulator::Schedule``/``Cancel``).
+
+Everything is single-threaded and seeded — a simulation replays bit-for-bit,
+which the tests and benchmarks rely on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Optional
+
+from repro.core.channel import Link
+from repro.core.packets import Packet
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time_ns: int
+    tie: int
+    fn: Callable[[], None] = dataclasses.field(compare=False)
+    cancelled: bool = dataclasses.field(compare=False, default=False)
+
+
+class Timer:
+    """Handle for a scheduled event; ``cancel()`` is idempotent."""
+
+    __slots__ = ("_event",)
+
+    def __init__(self, event: _Event):
+        self._event = event
+
+    def cancel(self) -> None:
+        self._event.cancelled = True
+
+    @property
+    def active(self) -> bool:
+        return not self._event.cancelled
+
+
+class Node:
+    """A network endpoint with an IPv4-style address.
+
+    Transports attach themselves via ``register`` to receive packets; the
+    node dispatches on (txn) so multiple concurrent transactions coexist
+    (N clients talking to one server).
+    """
+
+    def __init__(self, sim: "Simulator", addr: str):
+        self.sim = sim
+        self.addr = addr
+        self._handlers: list[Callable[[Packet], bool]] = []
+
+    def register(self, handler: Callable[[Packet], bool]) -> None:
+        """Handler returns True if it consumed the packet."""
+        self._handlers.append(handler)
+
+    def unregister(self, handler: Callable[[Packet], bool]) -> None:
+        if handler in self._handlers:
+            self._handlers.remove(handler)
+
+    def deliver(self, pkt: Packet) -> None:
+        for h in list(self._handlers):
+            if h(pkt):
+                return
+        self.sim.log(f"{self.addr}: unhandled packet {pkt}")
+
+    def send(self, pkt: Packet, dest: "Node") -> None:
+        self.sim.transmit(self, dest, pkt)
+
+
+class Simulator:
+    """Event calendar + topology. Times are integer nanoseconds."""
+
+    def __init__(self, *, trace: bool = False):
+        self.now_ns: int = 0
+        self._queue: list[_Event] = []
+        self._tie = itertools.count()
+        self._nodes: dict[str, Node] = {}
+        self._links: dict[tuple[str, str], Link] = {}
+        self.trace = trace
+        self.trace_lines: list[str] = []
+        # Counters for benchmarks.
+        self.stats = {
+            "packets_sent": 0, "packets_dropped": 0, "packets_delivered": 0,
+            "bytes_sent": 0, "bytes_delivered": 0,
+        }
+
+    # -- topology ----------------------------------------------------------
+    def node(self, addr: str) -> Node:
+        if addr not in self._nodes:
+            self._nodes[addr] = Node(self, addr)
+        return self._nodes[addr]
+
+    def connect(self, a: str, b: str, link_a_to_b: Link,
+                link_b_to_a: Optional[Link] = None) -> None:
+        """Install a bidirectional point-to-point link (one Link per
+        direction so loss/rate can be asymmetric)."""
+        self.node(a)
+        self.node(b)
+        self._links[(a, b)] = link_a_to_b
+        self._links[(b, a)] = link_b_to_a if link_b_to_a is not None else \
+            dataclasses.replace(link_a_to_b, _busy_until_ns=0)
+
+    def star(self, server: str, clients: list[str], make_link) -> None:
+        """The paper's topology: N clients around one server."""
+        for c in clients:
+            self.connect(c, server, make_link(), make_link())
+
+    # -- scheduling ----------------------------------------------------------
+    def schedule(self, delay_ns: int, fn: Callable[[], None]) -> Timer:
+        ev = _Event(self.now_ns + int(delay_ns), next(self._tie), fn)
+        heapq.heappush(self._queue, ev)
+        return Timer(ev)
+
+    def transmit(self, src: Node, dst: Node, pkt: Packet) -> None:
+        link = self._links.get((src.addr, dst.addr))
+        if link is None:
+            raise KeyError(f"no link {src.addr} -> {dst.addr}")
+        self.stats["packets_sent"] += 1
+        self.stats["bytes_sent"] += pkt.size_bytes
+        # FIFO serialization: this packet starts when the link frees up.
+        start = max(self.now_ns, link._busy_until_ns)
+        ser = link.serialization_ns(pkt.size_bytes)
+        link._busy_until_ns = start + ser
+        arrival = start + ser + link.delay_ns
+        if link.loss.drops(pkt):
+            self.stats["packets_dropped"] += 1
+            self.log(f"t={self.now_ns}ns DROP  {src.addr}->{dst.addr} {pkt}")
+            return
+        self.log(f"t={self.now_ns}ns SEND  {src.addr}->{dst.addr} {pkt} "
+                 f"arrives t={arrival}ns")
+
+        def _deliver() -> None:
+            self.stats["packets_delivered"] += 1
+            self.stats["bytes_delivered"] += pkt.size_bytes
+            dst.deliver(pkt)
+
+        self.schedule(arrival - self.now_ns, _deliver)
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, until_ns: Optional[int] = None, max_events: int = 10_000_000
+            ) -> int:
+        """Drain the calendar; returns the final simulation time."""
+        n = 0
+        while self._queue:
+            ev = heapq.heappop(self._queue)
+            if ev.cancelled:
+                continue
+            if until_ns is not None and ev.time_ns > until_ns:
+                # Put it back for a later resumed run().
+                heapq.heappush(self._queue, ev)
+                self.now_ns = until_ns
+                break
+            self.now_ns = ev.time_ns
+            ev.fn()
+            n += 1
+            if n >= max_events:
+                raise RuntimeError("simulator event budget exceeded "
+                                   "(livelock in a transport state machine?)")
+        return self.now_ns
+
+    def log(self, line: str) -> None:
+        if self.trace:
+            self.trace_lines.append(line)

@@ -1,0 +1,6 @@
+from repro.data.pipeline import (TokenPipeline, federated_partitions,
+                                 synthetic_batch)
+from repro.data.mnist import SyntheticMnist
+
+__all__ = ["TokenPipeline", "federated_partitions", "synthetic_batch",
+           "SyntheticMnist"]

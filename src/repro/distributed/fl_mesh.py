@@ -1,0 +1,107 @@
+"""In-fabric federated aggregation over the mesh's ``pod`` axis.
+
+This is the production mapping of the paper's transport (DESIGN.md §2.3):
+each pod is one FL client; its model copy is the leading ``pod`` dimension of
+a stacked parameter tree. One FL round's aggregation = paper Eq. (1)/FedAvg
+across that axis:
+
+ * ``exact``  — mean over the pod axis (GSPMD lowers to a bf16 all-reduce:
+   the cross-pod DCI carries 2 x 2 bytes/param).
+ * ``int8``   — the beyond-paper compressed exchange: each pod blockwise
+   absmax-int8 quantizes its copy (the SAME codec as the MUDP wire /
+   quantize kernel), all-gathers the int8 payloads + scales across pods,
+   dequantizes and averages locally. Cross-pod bytes drop ~4x; quantization
+   error is bounded by absmax/254 per block (tested) and an error-feedback
+   residual can absorb it across rounds.
+
+Both variants lower + compile on the (pod, data, model) production mesh —
+the §Perf log records the collective-byte delta for granite-34b.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+QBLOCK = 1024
+
+
+def stack_for_pods(params: Any, n_pods: int) -> Any:
+    """Replicate a template tree into per-pod copies (leading pod dim)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape), params)
+
+
+def stacked_specs(param_specs: Any) -> Any:
+    from repro.distributed.sharding import _is_spec_leaf
+    return jax.tree_util.tree_map(lambda s: ("fl_pod",) + s, param_specs,
+                                  is_leaf=_is_spec_leaf)
+
+
+def _quantize_leaf(x: jax.Array):
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    nb = -(-n // QBLOCK)
+    pad = nb * QBLOCK - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(nb, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.rint(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jax.Array, scale: jax.Array, shape, dtype):
+    out = (q.astype(jnp.float32) * scale[..., None]).reshape(q.shape[0], -1)
+    n = 1
+    for s in shape:
+        n *= s
+    return out[..., :n].reshape((q.shape[0],) + tuple(shape)).astype(dtype)
+
+
+def make_fl_aggregate(mesh, *, mode: str = "exact"):
+    """Returns agg(stacked_params) -> stacked_params with every pod holding
+    the aggregate (paper Eq. 1 semantics generalized to N pods)."""
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+
+    if mode == "exact":
+        def agg(stacked):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    jnp.mean(x.astype(jnp.float32), axis=0,
+                             keepdims=True).astype(x.dtype), x.shape),
+                stacked)
+        return agg
+
+    if mode != "int8":
+        raise ValueError(mode)
+
+    def agg(stacked):
+        def leaf(x):
+            # x: (pod, ...) sharded pod on dim0. Quantization is ROW-wise
+            # (absmax over the last dim) so it composes with the 2D
+            # data/model sharding of the other dims — a flattened 1024-block
+            # layout would force a full-parameter gather (measured: 185x
+            # worse; §Perf log).
+            def local(x_l):
+                xe = x_l[0].astype(jnp.float32)
+                scale = jnp.maximum(jnp.max(jnp.abs(xe), axis=-1), 1e-12) \
+                    / 127.0
+                q = jnp.clip(jnp.rint(xe / scale[..., None]), -127,
+                             127).astype(jnp.int8)
+                q_all = jax.lax.all_gather(q, "pod")         # (P, ...)
+                s_all = jax.lax.all_gather(scale, "pod")
+                deq = q_all.astype(jnp.float32) * s_all[..., None]
+                return jnp.mean(deq, axis=0)[None].astype(x_l.dtype)
+
+            in_spec = P(*(("pod",) + (None,) * (x.ndim - 1)))
+            return jax.shard_map(local, mesh=mesh, in_specs=in_spec,
+                                 out_specs=in_spec, check_vma=False,
+                                 axis_names={"pod"})(x)
+        return jax.tree_util.tree_map(leaf, stacked)
+
+    return agg

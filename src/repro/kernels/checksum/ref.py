@@ -1,0 +1,42 @@
+"""Pure-numpy/jnp oracle for the packet checksum kernel.
+
+ChunkSum-32 (this framework's on-device payload checksum): over byte values
+x_i (widened to int32),
+
+  A = sum_i x_i                    (int32 wraparound)
+  B = sum_i ((i mod 8191) + 1)*x_i (int32 wraparound)
+  checksum = (A & 0xFFFF) | ((B & 0xFFFF) << 16)
+
+Weights are bounded so every product fits int32 exactly; wrap-around adds are
+deterministic and order-independent — unlike Adler-32's sequential prefix
+form, every term is independent, which is what makes it a TPU-friendly
+single-pass reduction. Used to verify payload integrity on-device before
+hand-off to the NIC; the wire codec keeps zlib.adler32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WEIGHT_PERIOD = 8191
+
+
+def chunksum32_np(data: np.ndarray) -> int:
+    """data: uint8 array."""
+    x = data.astype(np.uint32)
+    idx = np.arange(x.size, dtype=np.uint32)
+    w = (idx % WEIGHT_PERIOD) + 1
+    A = np.uint32(x.sum(dtype=np.uint64) & 0xFFFFFFFF)
+    B = np.uint32((w.astype(np.uint64) * x).sum(dtype=np.uint64)
+                  & 0xFFFFFFFF)
+    return int((A & 0xFFFF) | ((B & 0xFFFF) << np.uint32(16)))
+
+
+def chunksum32_jnp(x_i32: jnp.ndarray) -> jnp.ndarray:
+    """x_i32: int32 array of byte values (0..255)."""
+    idx = jnp.arange(x_i32.shape[0], dtype=jnp.int32)
+    w = (idx % WEIGHT_PERIOD) + 1
+    A = jnp.sum(x_i32, dtype=jnp.int32)
+    B = jnp.sum(w * x_i32, dtype=jnp.int32)
+    return (A & 0xFFFF) | ((B & 0xFFFF) << 16)

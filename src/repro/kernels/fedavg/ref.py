@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused FedAvg kernel.
+
+Semantics: ``out = sum_k weights[k] * stack[k]`` over pre-normalized weights.
+Paper Eq. (1) is the K=2, w=(0.5, 0.5) case.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedavg_flat(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stack: (K, N) float32 client vectors; weights: (K,) pre-normalized."""
+    return jnp.einsum("k,kn->n", weights.astype(jnp.float32),
+                      stack.astype(jnp.float32))

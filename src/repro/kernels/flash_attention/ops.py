@@ -1,0 +1,26 @@
+"""Jit'd wrapper: GQA-aware flash attention in the model's (B,S,H,hd)
+layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool = True):
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd) -> (B,S,H,hd). KV heads broadcast."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        G = H // KV
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    out = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

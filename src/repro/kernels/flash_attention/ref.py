@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B,H,S,hd), k/v: (B,H,T,hd) -> (B,H,S,hd). f32 softmax."""
+    S, T = q.shape[2], k.shape[2]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok = ok & (ki <= qi)
+    if window > 0:
+        ok = ok & (qi - ki < window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)

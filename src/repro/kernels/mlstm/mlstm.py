@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: blockwise (chunkwise-parallel) mLSTM.
+
+The quadratic parallel mLSTM materializes the (S, S) gating matrix
+D[t,s] = F_t - F_s + i_s — at 32k context that is the 70 GiB memory wall the
+dry-run exposed for xlstm-350m prefill. This kernel runs the same math
+flash-attention-style: stream KV/gate blocks, keep a running row-max of D
+(the xLSTM stabilizer), rescale the accumulator and normalizer online, and
+never materialize more than a (BQ, BK) tile.
+
+    D_blk  = F_q[:,None] - F_k[None,:] + i_k[None,:]   (+ causal mask)
+    m'     = max(m, rowmax(D_blk));  c = exp(m - m')
+    s      = (q @ k^T / sqrt(dh)) * exp(D_blk - m')
+    n      = c*n + rowsum(s)            (signed!)
+    acc    = c*acc + s @ v
+    out    = acc / max(|n|, exp(-m'))
+
+F = cumsum(log sigmoid(f)) is computed outside (O(S), one pass) and streamed
+in per block. Same tiling budget as the flash kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, fq_ref, fk_ref, ik_ref, o_ref,
+                  m_ref, n_ref, acc_ref, *, scale: float, bq: int, bk: int,
+                  nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    f_q = fq_ref[0]                                  # (bq,)
+    f_k = fk_ref[0]                                  # (bk,)
+    i_k = ik_ref[0]                                  # (bk,)
+
+    d = f_q[:, None] - f_k[None, :] + i_k[None, :]   # (bq, bk)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    d = jnp.where(k_pos <= q_pos, d, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(d, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    gate = jnp.exp(d - m_new[:, None])
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale * gate
+    n_ref[...] = corr * n_ref[...] + jnp.sum(s, axis=1)
+    acc_ref[...] = corr[:, None] * acc_ref[...] + jax.lax.dot_general(
+        s.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(jnp.abs(n_ref[...]), jnp.exp(-m_ref[...]))
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def mlstm_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                 i_gate: jax.Array, f_gate: jax.Array, *,
+                 bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                 interpret: bool = True) -> jax.Array:
+    """q/k/v: (B,S,nh,dh); i/f gate logits: (B,S,nh) -> (B,S,nh,dh)."""
+    B, S, nh, dh = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    # cumulative log-sigmoid forget gates, per (batch*head)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))   # (B,S,nh)
+    F = jnp.cumsum(logf, axis=1)
+    bhs = lambda x: x.transpose(0, 2, 1, 3).reshape(B * nh, S, dh)
+    bh2 = lambda x: x.transpose(0, 2, 1).reshape(B * nh, S)
+    kernel = functools.partial(_mlstm_kernel, scale=dh ** -0.5, bq=bq,
+                               bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * nh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * nh, S, dh), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bhs(q), bhs(k), bhs(v), bh2(F),
+      bh2(F), bh2(i_gate.astype(jnp.float32)))
+    return out.reshape(B, nh, S, dh).transpose(0, 2, 1, 3)

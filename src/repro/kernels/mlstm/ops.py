@@ -1,0 +1,9 @@
+"""Jit'd wrapper for the chunkwise mLSTM kernel."""
+
+from __future__ import annotations
+
+from repro.kernels.mlstm.mlstm import mlstm_pallas
+
+
+def mlstm(q, k, v, i_gate, f_gate, *, interpret: bool = True):
+    return mlstm_pallas(q, k, v, i_gate, f_gate, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the chunkwise mLSTM kernel: delegates to the model's
+stabilized parallel form so kernel and model can never drift apart."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.xlstm import mlstm_parallel
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate):
+    """q/k/v: (B,S,nh,dh); gates (B,S,nh) -> (B,S,nh,dh)."""
+    return mlstm_parallel(q, k, v, i_gate, f_gate)

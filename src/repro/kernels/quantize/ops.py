@@ -1,0 +1,24 @@
+"""Jit'd wrappers: flat-vector int8 quantize/dequantize on device."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quantize.quantize import (QBLOCK, dequantize_pallas,
+                                             quantize_pallas)
+
+
+def quantize_vector(vec, *, interpret: bool = True):
+    """Flat f32 vector -> (q int8 (padded to QBLOCK), scales, n)."""
+    vec = jnp.asarray(vec, jnp.float32)
+    n = vec.shape[0]
+    nb = -(-n // QBLOCK)
+    padded = jnp.zeros((nb * QBLOCK,), jnp.float32).at[:n].set(vec)
+    q, s = quantize_pallas(padded.reshape(nb, QBLOCK), interpret=interpret)
+    return q, s, n
+
+
+def dequantize_vector(q, scales, n, *, interpret: bool = True):
+    out = dequantize_pallas(q, scales, interpret=interpret)
+    return out.reshape(-1)[:n]

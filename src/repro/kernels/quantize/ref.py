@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the blockwise int8 quantization kernel.
+
+Mirrors ``repro.core.compression.quantize_int8`` (the transport codec): per
+block of ``block`` values, scale = absmax/127, q = clip(rint(x/scale)).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_blockwise(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (nb, block) f32 -> (q int8 (nb, block), scales f32 (nb,))."""
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scales = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.rint(x / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def dequantize_blockwise(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scales[:, None]

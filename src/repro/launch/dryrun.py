@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the device count on first init, and the dry-run needs 512 placeholder host
+devices to build the (2, 16, 16) multi-pod mesh. Everything else (tests,
+benches) sees 1 CPU device because only this entry point sets the flag.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun.json
+"""
+
+import argparse
+import json
+import sys
+
+import jax  # noqa: E402  (intentionally after XLA_FLAGS)
+
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.launch.lowering import (cell_is_skipped, lower_cell,  # noqa: E402
+                                   shape_applicable)
+
+
+def run_cells(archs, shapes, meshes, *, attn_impl=None, out_path=None,
+              verbose=True):
+    reports = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_applicable(cfg, shape_name):
+                continue
+            for multi_pod in meshes:
+                rep = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                 attn_impl=attn_impl)
+                reports.append(rep)
+                if verbose:
+                    mark = {"ok": "PASS", "skipped": "SKIP",
+                            "error": "FAIL"}[rep.status]
+                    line = (f"[{mark}] {arch:22s} {shape_name:12s} "
+                            f"{rep.mesh:10s}")
+                    if rep.status == "ok":
+                        line += (f" mem/dev={rep.bytes_per_device/2**30:7.2f}GiB"
+                                 f" flops/dev={rep.hlo_flops:.3e}"
+                                 f" coll/dev={rep.collective_bytes:.3e}B"
+                                 f" dominant={rep.dominant}"
+                                 f" compile={rep.compile_seconds:.0f}s")
+                    else:
+                        line += f" {rep.error[:120]}"
+                    print(line, flush=True)
+                if out_path:
+                    with open(out_path, "w") as f:
+                        json.dump([r.to_json() for r in reports], f, indent=1)
+    return reports
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture id (repeatable); default: all")
+    ap.add_argument("--shape", action="append", default=None,
+                    choices=list(SHAPES), help="shape preset (repeatable)")
+    ap.add_argument("--all", action="store_true",
+                    help="all archs x all shapes")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="both")
+    ap.add_argument("--attn-impl", choices=["einsum", "chunked"],
+                    default=None)
+    ap.add_argument("--out", default=None, help="JSON report path")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run requires the 512 fake host devices (XLA_FLAGS not applied "
+        "— was jax initialized before this module?)")
+
+    archs = args.arch or ARCH_IDS
+    shapes = args.shape or list(SHAPES)
+    meshes = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+    reports = run_cells(archs, shapes, meshes, attn_impl=args.attn_impl,
+                        out_path=args.out)
+    bad = [r for r in reports if r.status == "error"]
+    print(f"\n{len(reports)} cells: "
+          f"{sum(r.status == 'ok' for r in reports)} ok, "
+          f"{sum(r.status == 'skipped' for r in reports)} skipped, "
+          f"{len(bad)} failed")
+    for r in bad:
+        print(f"  FAIL {r.arch} {r.shape} {r.mesh}: {r.error[:200]}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,376 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE —
+under scan-over-layers every per-layer dot/collective would be undercounted
+by the layer count (verified empirically in tests). This module re-derives
+
+  * FLOPs           (dot ops: 2 * prod(result) * prod(lhs contracting dims)),
+  * bytes accessed  (per instruction: operands + result, fusion-boundary
+                     semantics like HloCostAnalysis; tuple/GTE/bitcast free),
+  * collective bytes (all-gather/all-reduce/reduce-scatter/all-to-all/
+                      collective-permute, with ring-cost multipliers)
+
+by walking the computation graph and multiplying ``while`` bodies by their
+``known_trip_count`` (XLA annotates scans with it; unknowable loops count
+once and are reported).
+
+This is text parsing of the stable HLO dump format — deliberately defensive:
+anything unparseable contributes zero and is tallied in ``warnings``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+    "opaque": 0,
+}
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_MULTIPLIER = {
+    # bytes moved per device ~ multiplier * buffer bytes (ring algorithms;
+    # (k-1)/k ~ 1 omitted, documented in EXPERIMENTS.md)
+    "all-reduce": 2.0, "all-reduce-start": 2.0,
+    "all-gather": 1.0, "all-gather-start": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0, "collective-permute-start": 1.0,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (array or tuple)."""
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _array_dims(type_str: str) -> Optional[list[int]]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: list[_Instr]
+    param_types: dict[str, str]
+
+
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s+->\s+.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.*)$")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+def _split_type_and_rest(rest: str) -> tuple[str, str]:
+    """rest = '<type> <op>(<operands>), attrs...' -> (type_str, remainder)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[:i + 1], rest[i + 1:].strip()
+        return rest, ""
+    sp = rest.find(" ")
+    return (rest, "") if sp < 0 else (rest[:sp], rest[sp + 1:].strip())
+
+
+def _parse_params(sig: str) -> dict[str, str]:
+    """'a.1: bf16[4], b: (s32[], f32[2,2])' -> {name: type_str}"""
+    out = {}
+    depth = 0
+    start = 0
+    parts = []
+    for i, ch in enumerate(sig):
+        if ch in "([":
+            depth += 1
+        elif ch in ")]":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(sig[start:i])
+            start = i + 1
+    if sig[start:].strip():
+        parts.append(sig[start:])
+    for p in parts:
+        if ":" in p:
+            name, t = p.split(":", 1)
+            out[name.strip().lstrip("%")] = t.strip()
+    return out
+
+
+def parse_hlo(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = _Computation(m.group(1), [], _parse_params(m.group(2)))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, remainder = _split_type_and_rest(rest)
+        om = re.match(r"([\w\-]+)\(", remainder)
+        if not om:
+            continue
+        op = om.group(1)
+        # operand segment: balanced parens after op name
+        depth = 0
+        opstart = remainder.find("(")
+        opend = opstart
+        for i in range(opstart, len(remainder)):
+            if remainder[i] == "(":
+                depth += 1
+            elif remainder[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    opend = i
+                    break
+        operand_str = remainder[opstart + 1:opend]
+        attrs = remainder[opend + 1:]
+        operands = _OPERAND_NAME.findall(operand_str)
+        cur.instrs.append(_Instr(name, type_str, op, operands, attrs))
+    return comps
+
+
+_FREE_OPS = {"tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+             "after-all", "partition-id", "replica-id", "iota",
+             "all-gather-done", "all-reduce-done", "collective-permute-done",
+             "copy-done", "copy-start", "opt-barrier"}
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    # TPU-fused traffic model: XLA:TPU fuses elementwise/convert/broadcast
+    # chains into their producers/consumers, so only data-moving ops (dots,
+    # copies, DUS, gathers/scatters, sorts, fusion boundaries, collectives,
+    # loop-carried state) touch HBM. XLA:CPU leaves those chains unfused in
+    # the HLO, so ``bytes_accessed`` (HloCostAnalysis semantics) overcounts
+    # them; ``bytes_fused`` is the roofline's memory term.
+    bytes_fused: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+    warnings: list = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.flops * k, self.bytes_accessed * k,
+                       self.bytes_fused * k,
+                       self.collective_bytes * k,
+                       {n: c * k for n, c in self.collective_counts.items()},
+                       self.unknown_trip_loops, list(self.warnings))
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes_accessed += other.bytes_accessed
+        self.bytes_fused += other.bytes_fused
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v
+        self.unknown_trip_loops += other.unknown_trip_loops
+        self.warnings.extend(other.warnings)
+
+
+# Ops whose I/O hits HBM even under TPU fusion.
+_TRAFFIC_OPS = {
+    "dot", "dot-general", "convolution", "fusion", "call", "custom-call",
+    "copy", "dynamic-update-slice", "dynamic-slice", "gather", "scatter",
+    "sort", "map", "reduce", "reduce-window", "select-and-scatter",
+    "concatenate", "pad", "slice", "transpose",
+}
+
+# Pure-elementwise ops: a fusion whose body contains ONLY these would be
+# folded into its producers/consumers by XLA:TPU — its I/O is not real HBM
+# traffic. XLA:CPU emits them as single-op kLoop fusions.
+_EW_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "convert", "select", "compare",
+    "broadcast", "negate", "rsqrt", "sqrt", "tanh", "logistic", "log",
+    "log-plus-one", "abs", "sign", "and", "or", "not", "xor", "floor",
+    "ceil", "round-nearest-even", "round-nearest-afz", "clamp", "power",
+    "parameter", "constant", "iota", "reshape", "bitcast", "tuple",
+    "get-tuple-element", "is-finite", "reduce", "rem", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "popcnt", "clz",
+    "atan2", "cbrt", "cosine", "sine", "erf", "expm1", "log1p",
+}
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: dict[str, HloCost] = {}
+        self._ew_memo: dict[str, bool] = {}
+        self._entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HEADER.match(line.strip())
+                if m:
+                    self._entry = m.group(1)
+        if self._entry is None:  # fall back: computation named main*
+            for name in self.comps:
+                if name.startswith("main"):
+                    self._entry = name
+
+    # -- per-computation symbol table --------------------------------------
+    def _shapes(self, comp: _Computation) -> dict[str, str]:
+        table = dict(comp.param_types)
+        for ins in comp.instrs:
+            table[ins.name] = ins.type_str
+        return table
+
+    def _dot_flops(self, ins: _Instr, table: dict[str, str]) -> float:
+        dims = _array_dims(ins.type_str)
+        if dims is None:
+            return 0.0
+        result_elems = 1
+        for d in dims:
+            result_elems *= d
+        contract = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+        if m and ins.operands:
+            lhs_type = table.get(ins.operands[0])
+            lhs_dims = _array_dims(lhs_type) if lhs_type else None
+            if lhs_dims is not None and m.group(1):
+                for idx in m.group(1).split(","):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+        return 2.0 * result_elems * contract
+
+    def cost_of(self, comp_name: str) -> HloCost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        out = HloCost()
+        if comp is None:
+            out.warnings.append(f"missing computation {comp_name}")
+            self._memo[comp_name] = out
+            return out
+        self._memo[comp_name] = out  # break cycles defensively
+        table = self._shapes(comp)
+        for ins in comp.instrs:
+            if ins.op == "while":
+                m = _TRIP_RE.search(ins.attrs)
+                trip = int(m.group(1)) if m else 1
+                if not m:
+                    out.unknown_trip_loops += 1
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                if bm:
+                    out.add(self.cost_of(bm.group(1)).scaled(trip))
+                continue
+            if ins.op in ("fusion", "call", "custom-call", "map", "reduce",
+                          "reduce-window", "sort", "scatter", "select-and-scatter"):
+                # bytes at the boundary
+                io = self._io_bytes(ins, table)
+                out.bytes_accessed += io
+                if not (ins.op == "fusion"
+                        and self._fusion_is_elementwise(ins)):
+                    out.bytes_fused += io
+                # flops inside called computations (dots can hide in there)
+                for target in _CALLS_RE.findall(ins.attrs):
+                    sub = self.cost_of(target)
+                    out.flops += sub.flops
+                    out.collective_bytes += sub.collective_bytes
+                continue
+            if ins.op == "conditional":
+                out.bytes_accessed += self._io_bytes(ins, table)
+                branches = _COND_BRANCHES_RE.search(ins.attrs)
+                names = (_OPERAND_NAME.findall(branches.group(1))
+                         if branches else _CALLS_RE.findall(ins.attrs))
+                subs = [self.cost_of(n) for n in names]
+                if subs:
+                    worst = max(subs, key=lambda c: c.flops)
+                    out.add(worst)
+                continue
+            if ins.op in _FREE_OPS:
+                continue
+            io = self._io_bytes(ins, table)
+            out.bytes_accessed += io
+            if ins.op in _TRAFFIC_OPS or ins.op in COLLECTIVE_MULTIPLIER:
+                out.bytes_fused += io
+            if ins.op in ("dot", "dot-general"):
+                out.flops += self._dot_flops(ins, table)
+            if ins.op in COLLECTIVE_MULTIPLIER:
+                buf = _type_bytes(ins.type_str)
+                if ins.op.startswith(("all-reduce", "reduce-scatter",
+                                      "all-to-all", "collective-permute")):
+                    # use operand bytes for reduce-style ops
+                    op_bytes = sum(_type_bytes(table.get(o, ""))
+                                   for o in ins.operands)
+                    buf = max(buf, op_bytes)
+                out.collective_bytes += COLLECTIVE_MULTIPLIER[ins.op] * buf
+                out.collective_counts[ins.op] = \
+                    out.collective_counts.get(ins.op, 0) + 1
+        return out
+
+    def _fusion_is_elementwise(self, ins: _Instr) -> bool:
+        """True if every op in the fusion body is pure elementwise (would be
+        fused away on TPU)."""
+        for target in _CALLS_RE.findall(ins.attrs):
+            if target in self._ew_memo:
+                return self._ew_memo[target]
+            comp = self.comps.get(target)
+            ok = comp is not None and all(
+                i.op in _EW_OPS for i in comp.instrs)
+            self._ew_memo[target] = ok
+            return ok
+        return False
+
+    def _io_bytes(self, ins: _Instr, table: dict[str, str]) -> float:
+        total = float(_type_bytes(ins.type_str))
+        for o in ins.operands:
+            t = table.get(o)
+            if t is not None:
+                total += _type_bytes(t)
+        return total
+
+    def entry_cost(self) -> HloCost:
+        if self._entry is None:
+            return HloCost(warnings=["no ENTRY computation found"])
+        return self.cost_of(self._entry)
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    return HloAnalyzer(text).entry_cost()

@@ -1,0 +1,261 @@
+"""Cell lowering: (architecture x input-shape x mesh) -> compiled artifact +
+roofline terms. Shared by the dry-run CLI, the roofline benchmark, and the
+perf-iteration harness.
+
+Per cell this produces:
+  * lowered + compiled XLA executable (SPMD; the per-device program),
+  * memory_analysis (bytes/device — proves the cell fits in HBM),
+  * loop-aware HLO costs (FLOPs / bytes / collective bytes, from
+    repro.launch.hlo_cost — the raw cost_analysis() undercounts scans),
+  * the three roofline terms in seconds and the dominant bottleneck,
+  * MODEL_FLOPS = 6·N(_active)·D and the usefulness ratio.
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed import sharding as sh
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import model as M
+from repro.optim import AdamW, cosine_schedule, make_optimizer
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+# Cells skipped per DESIGN.md §Arch-applicability.
+LONG_CONTEXT_OK = {"xlstm-350m", "hymba-1.5b", "gemma3-12b"}
+
+# Per-cell training overrides: >=70B-class models need bf16 optimizer
+# moments + bf16 grad accumulation to fit v5e's 16 GiB (recorded in
+# EXPERIMENTS.md §Dry-run; numerically standard at this scale).
+CELL_TRAIN_OVERRIDES: dict[str, dict] = {
+    "qwen3-moe-235b-a22b": dict(optimizer="adafactor",
+                                accum_dtype="bfloat16",
+                                moe_impl="ragged"),
+    "qwen2-vl-72b": dict(moments_dtype="bfloat16",
+                         accum_dtype="bfloat16"),
+    "granite-34b": dict(moments_dtype="bfloat16"),
+}
+
+# Per-cell sharding-rule overrides (applied when the caller passes none):
+# sequence-parallel activations for the models whose layer-scan carry stack
+# (L x B x S x d) would not fit HBM otherwise (Megatron-SP; DESIGN.md §6).
+CELL_RULES_OVERRIDES: dict[tuple[str, str], dict] = {
+    ("granite-34b", "train_4k"): {"act_seq": "model"},
+    ("qwen2-vl-72b", "train_4k"): {"act_seq": "model"},
+    ("qwen3-moe-235b-a22b", "train_4k"): {"act_seq": "model"},
+    # Serve-time FSDP: >=34B-class weights cannot replicate across the data
+    # axis on 16 GiB chips — keep the 2D weight sharding at inference.
+    ("granite-34b", "prefill_32k"): {"w_data": "data", "embed_d": "data"},
+    ("qwen2-vl-72b", "prefill_32k"): {"w_data": "data", "embed_d": "data"},
+    ("qwen2-vl-72b", "decode_32k"): {"w_data": "data", "embed_d": "data"},
+    ("qwen3-moe-235b-a22b", "prefill_32k"): {"w_data": "data",
+                                             "embed_d": "data"},
+    ("qwen3-moe-235b-a22b", "decode_32k"): {"w_data": "data",
+                                            "embed_d": "data"},
+}
+
+
+def cell_is_skipped(arch: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return ("pure full-attention arch: 500k decode cache excluded "
+                "(DESIGN.md §Arch-applicability)")
+    return None
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    status: str = "ok"
+    error: str = ""
+    # memory_analysis
+    bytes_per_device: float = 0.0
+    argument_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    output_bytes: float = 0.0
+    # loop-aware HLO costs (per device)
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0          # raw per-instruction I/O (upper bound)
+    hlo_bytes_fused: float = 0.0    # TPU-fused traffic model (memory term)
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    xla_flops_raw: float = 0.0     # uncorrected cost_analysis() for reference
+    # roofline
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops_global: float = 0.0
+    useful_ratio: float = 0.0
+    compile_seconds: float = 0.0
+    num_devices: int = 0
+    notes: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global useful model FLOPs for this entry point (6ND convention)."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token
+
+
+def _build_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                     *, attn_impl: Optional[str], train_cfg: TrainConfig):
+    """Returns (jitted_fn, example_args) under the active mesh+rules."""
+    ins = M.input_specs(cfg, shape)
+    if shape.mode == "train":
+        if train_cfg.grad_accum == 0:  # auto: ~4k tokens per device per micro
+            sizes = mesh_axis_sizes(mesh)
+            ways = 1
+            t = rules.get("batch")
+            for nm in (t if isinstance(t, tuple) else (t,)):
+                ways *= sizes.get(nm, 1) if nm else 1
+            b_loc = max(1, shape.global_batch // ways)
+            accum = max(1, min(b_loc, b_loc * shape.seq_len // 4096))
+            train_cfg = dataclasses.replace(train_cfg, grad_accum=accum)
+        opt = make_optimizer(
+            train_cfg.optimizer,
+            cosine_schedule(train_cfg.learning_rate, train_cfg.warmup_steps,
+                            train_cfg.total_steps),
+            weight_decay=train_cfg.weight_decay,
+            grad_clip=train_cfg.grad_clip,
+            moments_dtype=train_cfg.moments_dtype)
+        state = M.abstract_train_state(cfg, opt)
+        st_shard = sh.tree_shardings(M.train_state_specs(cfg, opt))
+        b_shard = sh.tree_shardings(M.batch_specs(cfg, shape))["batch"]
+        step = M.make_train_step(cfg, opt, train_cfg,
+                                 attn_impl=attn_impl or "einsum")
+        fn = jax.jit(step, in_shardings=(st_shard, b_shard),
+                     donate_argnums=(0,))
+        return fn, (state, ins["batch"])
+    params = M.abstract_params(cfg)
+    p_shard = sh.tree_shardings(M.param_specs(cfg))
+    if shape.mode == "prefill":
+        b_shard = sh.tree_shardings(M.batch_specs(cfg, shape))["batch"]
+        cache_shard = sh.tree_shardings(M.cache_specs(cfg))
+        prefill = M.make_prefill_step(cfg, attn_impl=attn_impl or "chunked")
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard),
+                     out_shardings=(None, cache_shard))
+        return fn, (params, ins["batch"])
+    # decode
+    spec = sh.tree_shardings(M.batch_specs(cfg, shape))
+    decode = M.make_decode_step(cfg)
+    if cfg.mrope:
+        fn = jax.jit(lambda p, c, t, pos: decode(p, c, t, pos),
+                     in_shardings=(p_shard, spec["cache"], spec["tokens"],
+                                   spec["positions"]),
+                     out_shardings=(None, spec["cache"]),
+                     donate_argnums=(1,))
+        return fn, (params, ins["cache"], ins["tokens"], ins["positions"])
+    fn = jax.jit(lambda p, c, t: decode(p, c, t),
+                 in_shardings=(p_shard, spec["cache"], spec["tokens"]),
+                 out_shardings=(None, spec["cache"]),
+                 donate_argnums=(1,))
+    return fn, (params, ins["cache"], ins["tokens"])
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               attn_impl: Optional[str] = None,
+               train_cfg: Optional[TrainConfig] = None,
+               rules_override: Optional[dict] = None,
+               mesh=None, keep_artifacts: bool = False,
+               notes: str = "") -> CellReport:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rep = CellReport(arch=arch, shape=shape_name, mesh=mesh_name, notes=notes)
+
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        rep.status, rep.error = "skipped", skip
+        return rep
+
+    t0 = time.time()
+    try:
+        mesh = mesh if mesh is not None else \
+            make_production_mesh(multi_pod=multi_pod)
+        rep.num_devices = int(np.prod(mesh.devices.shape))
+        rules = sh.rules_for(cfg, shape, mesh)
+        if rules_override is None:
+            rules_override = CELL_RULES_OVERRIDES.get((arch, shape_name))
+        if rules_override:
+            rules.update(rules_override)
+            rep.notes = (rep.notes + " " if rep.notes else "") + \
+                f"rules overrides: {rules_override}"
+        if train_cfg is None:
+            over = CELL_TRAIN_OVERRIDES.get(arch, {})
+            train_cfg = TrainConfig(grad_accum=0, **over)
+            if over:
+                rep.notes = (rep.notes + " " if rep.notes else "") + \
+                    f"train overrides: {over}"
+        with sh.use_mesh(mesh, rules):
+            fn, args = _build_lowerable(
+                cfg, shape, mesh, rules, attn_impl=attn_impl,
+                train_cfg=train_cfg)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        rep.compile_seconds = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        rep.argument_bytes = float(mem.argument_size_in_bytes)
+        rep.temp_bytes = float(mem.temp_size_in_bytes)
+        rep.output_bytes = float(mem.output_size_in_bytes)
+        rep.bytes_per_device = float(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+
+        ca = compiled.cost_analysis() or {}
+        rep.xla_flops_raw = float(ca.get("flops", 0.0))
+
+        cost = hlo_cost.analyze_hlo_text(compiled.as_text())
+        rep.hlo_flops = cost.flops
+        rep.hlo_bytes = cost.bytes_accessed
+        rep.hlo_bytes_fused = cost.bytes_fused
+        rep.collective_bytes = cost.collective_bytes
+        rep.collective_counts = dict(cost.collective_counts)
+
+        rep.compute_s = cost.flops / PEAK_FLOPS
+        rep.memory_s = cost.bytes_fused / HBM_BW
+        rep.collective_s = cost.collective_bytes / ICI_BW
+        terms = {"compute": rep.compute_s, "memory": rep.memory_s,
+                 "collective": rep.collective_s}
+        rep.dominant = max(terms, key=terms.get)
+        rep.model_flops_global = model_flops(cfg, shape)
+        total_hlo = cost.flops * rep.num_devices
+        rep.useful_ratio = (rep.model_flops_global / total_hlo
+                            if total_hlo else 0.0)
+        if keep_artifacts:
+            rep.lowered = lowered            # type: ignore[attr-defined]
+            rep.compiled = compiled          # type: ignore[attr-defined]
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        rep.status = "error"
+        rep.error = f"{type(e).__name__}: {e}"[:2000]
+        rep.compile_seconds = time.time() - t0
+    return rep
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    if not cfg.has_decoder and SHAPES[shape_name].mode == "decode":
+        return False
+    return True

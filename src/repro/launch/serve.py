@@ -1,0 +1,77 @@
+"""Serving driver: batched prefill + greedy decode with the per-family cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --smoke \
+      --batch 2 --prompt-len 16 --gen 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="xlstm-350m", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if not cfg.has_decoder:
+        raise SystemExit(f"{args.arch} has no decode step")
+    rng = jax.random.PRNGKey(args.seed)
+    params = M.init(cfg, rng)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    prompt = jax.random.randint(rng, (B, P), 0, cfg.vocab_size)
+
+    decode = jax.jit(M.make_decode_step(cfg))
+    max_len = P + G
+    if cfg.family == "encdec":
+        frames = jax.random.normal(rng, (B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.float32)
+        lg, cache = M.make_prefill_step(cfg, attn_impl="einsum")(
+            params, {"tokens": prompt, "frames": frames})
+        pad = max_len - cache["k"].shape[2]
+        cache = dict(cache,
+                     k=jnp.pad(cache["k"], ((0, 0), (0, 0), (0, pad),
+                                            (0, 0), (0, 0))),
+                     v=jnp.pad(cache["v"], ((0, 0), (0, 0), (0, pad),
+                                            (0, 0), (0, 0))))
+        next_tok = jnp.argmax(lg, axis=-1)[:, None]
+    else:
+        # feed the prompt through decode steps against a full-size cache
+        cache = M.init_cache(cfg, B, max_len)
+        next_tok = prompt[:, :1]
+        for t in range(P):
+            lg, cache = decode(params, cache, prompt[:, t:t + 1])
+        next_tok = jnp.argmax(lg, axis=-1)[:, None]
+
+    out = [next_tok]
+    t0 = time.time()
+    for _ in range(G - 1):
+        lg, cache = decode(params, cache, next_tok)
+        next_tok = jnp.argmax(lg, axis=-1)[:, None]
+        out.append(next_tok)
+    dt = time.time() - t0
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"arch={cfg.name} generated {gen.shape} tokens "
+          f"({(G-1)*B/max(dt,1e-9):.1f} tok/s on this host)")
+    for b in range(B):
+        print(f"  seq{b}: {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

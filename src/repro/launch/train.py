@@ -1,0 +1,115 @@
+"""Training driver.
+
+Runs real optimization steps on the local device(s):
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --smoke \
+      --steps 20 --batch 4 --seq 128
+
+``--smoke`` swaps in the reduced same-family config (the full configs are
+for the dry-run / real pods). With a mesh larger than one device the step is
+jit-compiled with the same sharding rules the dry-run proves out; on one CPU
+device it runs unsharded. Checkpoints land in --ckpt-dir every
+--ckpt-every steps and training resumes from the latest checkpoint
+automatically (crash-restart story).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.configs.base import TrainConfig
+from repro.data import TokenPipeline
+from repro.models import model as M
+from repro.optim import TrainState, cosine_schedule, make_optimizer
+
+
+def build(arch: str, smoke: bool, train_cfg: TrainConfig):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = smoke_variant(cfg)
+    opt = make_optimizer(
+        train_cfg.optimizer,
+        cosine_schedule(train_cfg.learning_rate, train_cfg.warmup_steps,
+                        train_cfg.total_steps),
+        weight_decay=train_cfg.weight_decay, grad_clip=train_cfg.grad_clip)
+    return cfg, opt
+
+
+def make_batch_fn(cfg, batch, seq, seed=0):
+    pipe = TokenPipeline(cfg.vocab_size, seq, batch, seed=seed)
+
+    def get(step: int) -> dict:
+        b = pipe.batch(step)
+        out = {"tokens": b["tokens"], "labels": b["labels"]}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(1000 + step)
+            out["frames"] = rng.standard_normal(
+                (batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        if cfg.mrope:
+            out["positions"] = np.broadcast_to(
+                np.arange(seq, dtype=np.int32)[None, None], (3, batch, seq))
+            out["vision_embeds"] = np.zeros(
+                (batch, cfg.vision_tokens, cfg.d_model), np.float32)
+        return out
+
+    return get
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="yi-9b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor", "sgd"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                     total_steps=args.steps, optimizer=args.optimizer,
+                     grad_accum=args.grad_accum, remat_policy="none")
+    cfg, opt = build(args.arch, args.smoke, tc)
+    step_fn = jax.jit(M.make_train_step(cfg, opt, tc))
+    state = M.init_train_state(cfg, opt, jax.random.PRNGKey(args.seed))
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        if mgr.latest_step() is not None:
+            restored, meta = mgr.restore(state)
+            state = restored
+            print(f"resumed from step {meta['step']}")
+
+    get_batch = make_batch_fn(cfg, args.batch, args.seq, args.seed)
+    start = int(state.step)
+    t0 = time.time()
+    for s in range(start, args.steps):
+        state, metrics = step_fn(state, get_batch(s))
+        if s % args.log_every == 0 or s == args.steps - 1:
+            print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(s-start+1):.2f}s/step)", flush=True)
+        if mgr and (s + 1) % args.ckpt_every == 0:
+            mgr.save(s + 1, state, {"arch": args.arch})
+    if mgr:
+        mgr.save(args.steps, state, {"arch": args.arch})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

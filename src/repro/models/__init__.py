@@ -1,0 +1,11 @@
+from repro.models.model import (abstract_params, abstract_train_state,
+                                batch_specs, cache_specs, init, init_cache,
+                                init_train_state, input_specs, loss_fn,
+                                make_decode_step, make_prefill_step,
+                                make_train_step, param_specs,
+                                train_state_specs)
+
+__all__ = ["abstract_params", "abstract_train_state", "batch_specs",
+           "cache_specs", "init", "init_cache", "init_train_state",
+           "input_specs", "loss_fn", "make_decode_step", "make_prefill_step",
+           "make_train_step", "param_specs", "train_state_specs"]

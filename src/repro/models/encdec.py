@@ -1,0 +1,276 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, 1500, d). Positions are sinusoidal
+(parameter-free) on both sides so any decode horizon is mechanically
+supported. Norms are RMSNorm for uniformity with the rest of the zoo
+(assumption recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models.transformer import padded_vocab
+
+
+def sinusoidal(seq: int, d: int, dtype) -> jax.Array:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+def _attn_params(ks, Lr, d, H, KV, hd, dt, prefix=""):
+    return {
+        prefix + "wq": L.dense_init(next(ks), (Lr, d, H, hd), dt, d),
+        prefix + "wk": L.dense_init(next(ks), (Lr, d, KV, hd), dt, d),
+        prefix + "wv": L.dense_init(next(ks), (Lr, d, KV, hd), dt, d),
+        prefix + "wo": L.dense_init(next(ks), (Lr, H, hd, d), dt, H * hd),
+    }
+
+
+def init_encdec(cfg: ModelConfig, rng: jax.Array) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV, F = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    V = padded_vocab(cfg)
+    ks = iter(jax.random.split(rng, 40))
+
+    enc_layer = {
+        "attn_norm": jnp.ones((Le, d), dt),
+        "mlp_norm": jnp.ones((Le, d), dt),
+        "w_up": L.dense_init(next(ks), (Le, d, F), dt, d),
+        "w_down": L.dense_init(next(ks), (Le, F, d), dt, F),
+        **_attn_params(ks, Le, d, H, KV, hd, dt),
+    }
+    dec_layer = {
+        "attn_norm": jnp.ones((Ld, d), dt),
+        "cross_norm": jnp.ones((Ld, d), dt),
+        "mlp_norm": jnp.ones((Ld, d), dt),
+        "w_up": L.dense_init(next(ks), (Ld, d, F), dt, d),
+        "w_down": L.dense_init(next(ks), (Ld, F, d), dt, F),
+        **_attn_params(ks, Ld, d, H, KV, hd, dt),
+        **_attn_params(ks, Ld, d, H, KV, hd, dt, prefix="c"),
+    }
+    return {
+        "embed": L.dense_init(next(ks), (V, d), dt, d),
+        "unembed": L.dense_init(next(ks), (d, V), dt, d),
+        "enc_layers": enc_layer,
+        "dec_layers": dec_layer,
+        "enc_norm": jnp.ones((d,), dt),
+        "dec_norm": jnp.ones((d,), dt),
+    }
+
+
+def encdec_param_specs(cfg: ModelConfig) -> dict:
+    att = {
+        "wq": ("layers", "w_data", "heads", "head_dim"),
+        "wk": ("layers", "w_data", "kv_heads", "head_dim"),
+        "wv": ("layers", "w_data", "kv_heads", "head_dim"),
+        "wo": ("layers", "heads", "head_dim", "w_data"),
+    }
+    mlp = {"w_up": ("layers", "w_data", "d_ff"),
+           "w_down": ("layers", "d_ff", "w_data")}
+    return {
+        "embed": ("vocab", "embed_d"),
+        "unembed": ("embed_d", "vocab"),
+        "enc_layers": {"attn_norm": ("layers", None),
+                       "mlp_norm": ("layers", None), **att, **mlp},
+        "dec_layers": {"attn_norm": ("layers", None),
+                       "cross_norm": ("layers", None),
+                       "mlp_norm": ("layers", None), **att, **mlp,
+                       **{"c" + k: v for k, v in att.items()}},
+        "enc_norm": (None,),
+        "dec_norm": (None,),
+    }
+
+
+# --------------------------------------------------------------------------
+# Encoder
+# --------------------------------------------------------------------------
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array,
+           remat_policy: str = "dots") -> jax.Array:
+    """frames: precomputed conv-frontend embeddings (B, Te, d)."""
+    B, Te, d = frames.shape
+    x = frames + sinusoidal(Te, d, frames.dtype)[None]
+    x = constraint(x, "batch", "act_seq", None)
+    pos = jnp.arange(Te, dtype=jnp.int32)
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+
+    def body(h, p):
+        a_in = L.rmsnorm(h, p["attn_norm"])
+        q, k, v = L.qkv_proj(a_in, p["wq"], p["wk"], p["wv"], KV, G)
+        o = L.gqa_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=False)
+        h = h + L.out_proj(o, p["wo"])
+        m_in = L.rmsnorm(h, p["mlp_norm"])
+        h = h + L.mlp(m_in, p, "gelu")
+        return h, None
+
+    if remat_policy != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rmsnorm(x, params["enc_norm"])
+
+
+# --------------------------------------------------------------------------
+# Decoder (train forward)
+# --------------------------------------------------------------------------
+def decode_train(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 enc_out: jax.Array, remat_policy: str = "dots",
+                 attn_impl: str = "einsum") -> jax.Array:
+    B, S = tokens.shape
+    d = cfg.d_model
+    x = L.embed_tokens(params["embed"], tokens)
+    x = x + sinusoidal(S, d, x.dtype)[None]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    epos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+
+    def body(h, p):
+        a_in = L.rmsnorm(h, p["attn_norm"])
+        q, k, v = L.qkv_proj(a_in, p["wq"], p["wk"], p["wv"], KV, G)
+        o = L.attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                        impl=attn_impl)
+        h = h + L.out_proj(o, p["wo"])
+        c_in = L.rmsnorm(h, p["cross_norm"])
+        cq = jnp.einsum("bsd,dnh->bsnh", c_in, p["cwq"])
+        # cross K/V come from the encoder stream
+        ck = jnp.einsum("btd,dkh->btkh", enc_out, p["cwk"])
+        cv = jnp.einsum("btd,dkh->btkh", enc_out, p["cwv"])
+        co = L.gqa_attention(cq, ck, cv, q_pos=pos, kv_pos=epos, causal=False)
+        h = h + L.out_proj(co, p["cwo"])
+        m_in = L.rmsnorm(h, p["mlp_norm"])
+        h = h + L.mlp(m_in, p, "gelu")
+        return h, None
+
+    if remat_policy != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return L.rmsnorm(x, params["dec_norm"])
+
+
+def encdec_loss(cfg: ModelConfig, params: dict, batch: dict, *,
+                remat_policy: str = "dots", attn_impl: str = "einsum",
+                loss_chunk: int = 0) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"], remat_policy)
+    hidden = decode_train(cfg, params, batch["tokens"], enc_out,
+                          remat_policy, attn_impl)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, params["unembed"],
+                        preferred_element_type=jnp.float32)
+    return L.cross_entropy(logits, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode with self-KV cache and fixed cross-KV
+# --------------------------------------------------------------------------
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    Ld, Te = cfg.num_layers, cfg.encoder_seq
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, KV, hd), dt),
+        "v": jnp.zeros((Ld, batch, max_len, KV, hd), dt),
+        "ck": jnp.zeros((Ld, batch, Te, KV, hd), dt),
+        "cv": jnp.zeros((Ld, batch, Te, KV, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig) -> dict:
+    kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    ckv = ("layers", "batch", None, "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "ck": ckv, "cv": ckv, "pos": ()}
+
+
+def encdec_prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                   frames: jax.Array, attn_impl: str = "chunked"):
+    """Encode audio, precompute per-layer cross-KV, prefill decoder self-KV."""
+    enc_out = encode(cfg, params, frames, remat_policy="none")
+    B, S = tokens.shape
+    d = cfg.d_model
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    x = L.embed_tokens(params["embed"], tokens)
+    x = x + sinusoidal(S, d, x.dtype)[None]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    epos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(h, p):
+        a_in = L.rmsnorm(h, p["attn_norm"])
+        q, k, v = L.qkv_proj(a_in, p["wq"], p["wk"], p["wv"], KV, G)
+        o = L.attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                        impl=attn_impl)
+        h = h + L.out_proj(o, p["wo"])
+        c_in = L.rmsnorm(h, p["cross_norm"])
+        cq = jnp.einsum("bsd,dnh->bsnh", c_in, p["cwq"])
+        ck = jnp.einsum("btd,dkh->btkh", enc_out, p["cwk"])
+        cv = jnp.einsum("btd,dkh->btkh", enc_out, p["cwv"])
+        co = L.gqa_attention(cq, ck, cv, q_pos=pos, kv_pos=epos, causal=False)
+        h = h + L.out_proj(co, p["cwo"])
+        m_in = L.rmsnorm(h, p["mlp_norm"])
+        h = h + L.mlp(m_in, p, "gelu")
+        return h, (k, v, ck, cv)
+
+    x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rmsnorm(x, params["dec_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"],
+                        preferred_element_type=jnp.float32)
+    cache = {"k": k, "v": v, "ck": ck, "cv": cv,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def encdec_decode(cfg: ModelConfig, params: dict, cache: dict,
+                  tokens: jax.Array):
+    B, S1 = tokens.shape
+    d = cfg.d_model
+    T = cache["k"].shape[2]
+    pos = cache["pos"]
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    x = L.embed_tokens(params["embed"], tokens)
+    # sinusoidal at the current position
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+    q_pos = jnp.full((S1,), pos, jnp.int32)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    kv_valid = jnp.broadcast_to((kv_pos <= pos)[None], (B, T))
+    epos = jnp.arange(cache["ck"].shape[2], dtype=jnp.int32)
+
+    def body(h, xs):
+        p, k_l, v_l, ck_l, cv_l = xs
+        a_in = L.rmsnorm(h, p["attn_norm"])
+        q, k_new, v_new = L.qkv_proj(a_in, p["wq"], p["wk"], p["wv"], KV, G)
+        k_l = jax.lax.dynamic_update_slice(k_l, k_new.astype(k_l.dtype),
+                                           (0, pos, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v_new.astype(v_l.dtype),
+                                           (0, pos, 0, 0))
+        o = L.gqa_attention(q, k_l, v_l, q_pos=q_pos, kv_pos=kv_pos,
+                            causal=True, kv_valid=kv_valid)
+        h = h + L.out_proj(o, p["wo"])
+        c_in = L.rmsnorm(h, p["cross_norm"])
+        cq = jnp.einsum("bsd,dnh->bsnh", c_in, p["cwq"])
+        co = L.gqa_attention(cq, ck_l, cv_l, q_pos=q_pos, kv_pos=epos,
+                             causal=False)
+        h = h + L.out_proj(co, p["cwo"])
+        m_in = L.rmsnorm(h, p["mlp_norm"])
+        h = h + L.mlp(m_in, p, "gelu")
+        return h, (k_l, v_l)
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    x = L.rmsnorm(x, params["dec_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = dict(cache, k=k, v=v, pos=pos + 1)
+    return logits[:, 0], new_cache

@@ -1,0 +1,248 @@
+"""Hymba hybrid backbone: each block runs attention heads and a Mamba
+(selective-SSM) head IN PARALLEL on the same input, fuses the two normalized
+streams by averaging, then a SwiGLU MLP. Sliding-window attention everywhere
+except the configured full-attention layers ({first, middle, last}).
+
+Stubs recorded in DESIGN.md: meta-token prefix omitted; the SSM inner width
+equals d_model (parallel-head formulation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.transformer import is_global_flags, padded_vocab
+
+
+def init_hymba(cfg: ModelConfig, rng: jax.Array) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV, F, Lr = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff, cfg.num_layers
+    V = padded_vocab(cfg)
+    ks = iter(jax.random.split(rng, 32))
+    layer = {
+        "attn_norm": jnp.ones((Lr, d), dt),
+        "mlp_norm": jnp.ones((Lr, d), dt),
+        "fuse_norm_attn": jnp.ones((Lr, d), dt),
+        "fuse_norm_ssm": jnp.ones((Lr, d), dt),
+        "wq": L.dense_init(next(ks), (Lr, d, H, hd), dt, d),
+        "wk": L.dense_init(next(ks), (Lr, d, KV, hd), dt, d),
+        "wv": L.dense_init(next(ks), (Lr, d, KV, hd), dt, d),
+        "wo": L.dense_init(next(ks), (Lr, H, hd, d), dt, H * hd),
+        "w_in": L.dense_init(next(ks), (Lr, d, d), dt, d),
+        "w_gate_ssm": L.dense_init(next(ks), (Lr, d, d), dt, d),
+        "w_out_ssm": L.dense_init(next(ks), (Lr, d, d), dt, d),
+        "w_gate": L.dense_init(next(ks), (Lr, d, F), dt, d),
+        "w_up": L.dense_init(next(ks), (Lr, d, F), dt, d),
+        "w_down": L.dense_init(next(ks), (Lr, F, d), dt, F),
+        "ssm": M.init_ssm(ks, (Lr,), d, cfg.ssm_state, cfg.ssm_conv, dt, d),
+    }
+    return {
+        "embed": L.dense_init(next(ks), (V, d), dt, d),
+        "final_norm": jnp.ones((d,), dt),
+        "layers": layer,
+    }
+
+
+def hymba_param_specs(cfg: ModelConfig) -> dict:
+    layer = {
+        "attn_norm": ("layers", None), "mlp_norm": ("layers", None),
+        "fuse_norm_attn": ("layers", None), "fuse_norm_ssm": ("layers", None),
+        "wq": ("layers", "w_data", "heads", "head_dim"),
+        "wk": ("layers", "w_data", "kv_heads", "head_dim"),
+        "wv": ("layers", "w_data", "kv_heads", "head_dim"),
+        "wo": ("layers", "heads", "head_dim", "w_data"),
+        "w_in": ("layers", "w_data", "d_inner"),
+        "w_gate_ssm": ("layers", "w_data", "d_inner"),
+        "w_out_ssm": ("layers", "d_inner", "w_data"),
+        "w_gate": ("layers", "w_data", "d_ff"),
+        "w_up": ("layers", "w_data", "d_ff"),
+        "w_down": ("layers", "d_ff", "w_data"),
+        "ssm": M.ssm_param_specs(),
+    }
+    return {"embed": ("vocab", "embed_d"), "final_norm": (None,),
+            "layers": layer}
+
+
+def _block(x, p, cfg, cos, sin, q_pos, kv_pos, window, *,
+           kv_valid=None, attn_impl="einsum",
+           k_cache=None, v_cache=None, pos=None,
+           ssm_state=None, conv_state=None):
+    """One hybrid block. Cache args trigger the decode path."""
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+    h = L.rmsnorm(x, p["attn_norm"])
+    # -- attention path --
+    q, k, v = L.qkv_proj(h, p["wq"], p["wk"], p["wv"], KV, G)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    new_kv = (None, None)
+    if k_cache is not None:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        k, v = k_cache, v_cache
+        new_kv = (k_cache, v_cache)
+    o = L.attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                    window=window, kv_valid=kv_valid, impl=attn_impl)
+    attn_out = L.out_proj(o, p["wo"])
+    # -- SSM path (parallel, same input) --
+    xin = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    z = jnp.einsum("bsd,de->bse", h, p["w_gate_ssm"])
+    y, new_ssm, new_conv = M.selective_scan(
+        xin, p["ssm"], state=ssm_state, conv_state=conv_state)
+    ssm_out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z), p["w_out_ssm"])
+    # -- fuse: mean of normalized streams --
+    fused = 0.5 * (L.rmsnorm(attn_out, p["fuse_norm_attn"])
+                   + L.rmsnorm(ssm_out, p["fuse_norm_ssm"]))
+    x = x + fused
+    x = x + L.mlp(L.rmsnorm(x, p["mlp_norm"]), p, cfg.mlp_type)
+    return x, new_kv, new_ssm, new_conv
+
+
+def hymba_hidden(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 remat_policy: str = "dots", attn_impl: str = "einsum",
+                 collect_kv: bool = False):
+    B, S = tokens.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = L.rope_cos_sin(jnp.broadcast_to(pos[None], (B, S)),
+                              cfg.resolved_head_dim, cfg.rope_theta)
+    x = L.embed_tokens(params["embed"], tokens)
+    x = constraint(x, "batch", "act_seq", None)
+    flags = jnp.asarray(is_global_flags(cfg))
+    win = cfg.sliding_window
+
+    def body(h, xs):
+        p, flag = xs
+        window = jnp.where(flag, jnp.int32(0), jnp.int32(win))
+        out, kv, _, _ = _block(h, p, cfg, cos, sin, pos, pos, window,
+                               attn_impl=attn_impl)
+        return out, None
+
+    if remat_policy == "full":
+        body = jax.checkpoint(body)
+    elif remat_policy == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, (params["layers"], flags))
+    return L.rmsnorm(x, params["final_norm"])
+
+
+def hymba_loss(cfg, params, batch, *, remat_policy="dots",
+               attn_impl="einsum", **_):
+    hidden = hymba_hidden(cfg, params, batch["tokens"], remat_policy,
+                          attn_impl)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, params["unembed"],
+                        preferred_element_type=jnp.float32) \
+        if "unembed" in params else \
+        jnp.einsum("bsd,vd->bsv", hidden, params["embed"],
+                   preferred_element_type=jnp.float32)
+    return L.cross_entropy(logits, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+def init_hymba_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    KV, hd, Lr = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    return {
+        "k": jnp.zeros((Lr, batch, max_len, KV, hd), dt),
+        "v": jnp.zeros((Lr, batch, max_len, KV, hd), dt),
+        "ssm": jnp.zeros((Lr, batch, cfg.d_model, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((Lr, batch, cfg.ssm_conv - 1, cfg.d_model), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def hymba_cache_specs(cfg: ModelConfig) -> dict:
+    return {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            "ssm": ("layers", "batch", "d_inner", None),
+            "conv": ("layers", "batch", None, "d_inner"),
+            "pos": ()}
+
+
+def hymba_prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  attn_impl: str = "chunked"):
+    """Parallel prompt processing returning last-token logits + serve cache
+    (KV per layer, SSM state, conv tail)."""
+    B, S = tokens.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = L.rope_cos_sin(jnp.broadcast_to(pos[None], (B, S)),
+                              cfg.resolved_head_dim, cfg.rope_theta)
+    x = L.embed_tokens(params["embed"], tokens)
+    flags = jnp.asarray(is_global_flags(cfg))
+    win = cfg.sliding_window
+    KV, G = cfg.num_kv_heads, cfg.q_groups
+
+    def body(h, xs):
+        p, flag = xs
+        window = jnp.where(flag, jnp.int32(0), jnp.int32(win))
+        hn = L.rmsnorm(h, p["attn_norm"])
+        q, k, v = L.qkv_proj(hn, p["wq"], p["wk"], p["wv"], KV, G)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        o = L.attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                        window=window, impl=attn_impl)
+        attn_out = L.out_proj(o, p["wo"])
+        xin = jnp.einsum("bsd,de->bse", hn, p["w_in"])
+        z = jnp.einsum("bsd,de->bse", hn, p["w_gate_ssm"])
+        y, ssm_state, _ = M.selective_scan(xin, p["ssm"])
+        conv_tail = xin[:, -(cfg.ssm_conv - 1):, :]
+        ssm_out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
+                             p["w_out_ssm"])
+        fused = 0.5 * (L.rmsnorm(attn_out, p["fuse_norm_attn"])
+                       + L.rmsnorm(ssm_out, p["fuse_norm_ssm"]))
+        h = h + fused
+        h = h + L.mlp(L.rmsnorm(h, p["mlp_norm"]), p, cfg.mlp_type)
+        return h, (k, v, ssm_state, conv_tail)
+
+    x, (k, v, ssm, conv) = jax.lax.scan(body, x, (params["layers"], flags))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"],
+                        preferred_element_type=jnp.float32)
+    cache = {"k": k, "v": v, "ssm": ssm, "conv": conv.astype(jnp.dtype(cfg.dtype)),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def hymba_decode(cfg: ModelConfig, params: dict, cache: dict,
+                 tokens: jax.Array):
+    B, S1 = tokens.shape
+    T = cache["k"].shape[2]
+    pos = cache["pos"]
+    positions = jnp.full((B, S1), pos, jnp.int32)
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim,
+                              cfg.rope_theta)
+    x = L.embed_tokens(params["embed"], tokens)
+    q_pos = jnp.full((S1,), pos, jnp.int32)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    kv_valid = jnp.broadcast_to((kv_pos <= pos)[None], (B, T))
+    flags = jnp.asarray(is_global_flags(cfg))
+    win = cfg.sliding_window
+
+    def body(h, xs):
+        p, flag, k_l, v_l, ssm_l, conv_l = xs
+        window = jnp.where(flag, jnp.int32(0), jnp.int32(win))
+        out, (k2, v2), ssm2, conv2 = _block(
+            h, p, cfg, cos, sin, q_pos, kv_pos, window, kv_valid=kv_valid,
+            k_cache=k_l, v_cache=v_l, pos=pos,
+            ssm_state=ssm_l, conv_state=conv_l)
+        return out, (k2, v2, ssm2, conv2)
+
+    x, (k, v, ssm, conv) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"],
+                  cache["ssm"], cache["conv"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = {"k": k, "v": v, "ssm": ssm, "conv": conv, "pos": pos + 1}
+    return logits[:, 0], new_cache

@@ -1,0 +1,82 @@
+"""Selective SSM (Mamba-style) head used by the Hymba hybrid blocks.
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear recurrence
+h_t = a_t * h_{t-1} + b_t (log-depth parallel); decode is the O(1) recurrent
+step. Depthwise short conv is a causal 1D conv (kernel ``ssm_conv``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_ssm(ks, shape_prefix, d_inner: int, n_state: int, conv: int, dt,
+             d_in: int):
+    sp = shape_prefix
+    return {
+        "conv_w": L.dense_init(next(ks), sp + (conv, d_inner), dt, conv),
+        "w_dt": L.dense_init(next(ks), sp + (d_inner, d_inner), dt, d_inner),
+        "b_dt": jnp.full(sp + (d_inner,), -4.6, dt),   # softplus^-1(~0.01)
+        "w_B": L.dense_init(next(ks), sp + (d_inner, n_state), dt, d_inner),
+        "w_C": L.dense_init(next(ks), sp + (d_inner, n_state), dt, d_inner),
+        "A_log": jnp.zeros(sp + (d_inner, n_state), dt),
+        "D": jnp.ones(sp + (d_inner,), dt),
+    }
+
+
+def ssm_param_specs():
+    return {
+        "conv_w": ("layers", None, "d_inner"),
+        "w_dt": ("layers", "w_data", "d_inner"),
+        "b_dt": ("layers", "d_inner"),
+        "w_B": ("layers", "w_data", None),
+        "w_C": ("layers", "w_data", None),
+        "A_log": ("layers", "d_inner", None),
+        "D": ("layers", "d_inner"),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array,
+                state: jax.Array | None = None):
+    """Depthwise causal conv. x (B,S,D), w (K,D). With ``state`` (B,K-1,D)
+    performs the streaming update (decode) and returns (y, new_state)."""
+    K = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)      # (B,K,D) for S=1
+        y = jnp.einsum("bkd,kd->bd", window[:, -K:], w)[:, None]
+        return y, window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, None
+
+
+def selective_scan(x: jax.Array, p: dict, *, state=None, conv_state=None):
+    """x: (B,S,Di) pre-activation stream. Returns (y (B,S,Di), new_state,
+    new_conv_state). ``state``: (B,Di,N) triggers single-step decode."""
+    xc, new_conv = causal_conv(x, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,de->bse", xc, p["w_dt"]) + p["b_dt"])
+    Bm = jnp.einsum("bsd,dn->bsn", xc, p["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", xc, p["w_C"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (Di,N)
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * A)     # (B,S,Di,N)
+    b = (dt[..., None] * Bm[:, :, None, :] * xc[..., None]).astype(jnp.float32)
+
+    if state is None:
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+        new_state = h[:, -1]
+    else:
+        h = a[:, 0] * state + b[:, 0]                      # (B,Di,N)
+        new_state = h
+        h = h[:, None]
+    y = jnp.einsum("bsdn,bsn->bsd", h.astype(Cm.dtype), Cm)
+    y = y + p["D"] * xc
+    return y.astype(x.dtype), new_state, new_conv

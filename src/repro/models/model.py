@@ -1,0 +1,291 @@
+"""Unified model API: every architecture family behind one dispatch.
+
+  init(cfg, rng)            -> params pytree
+  param_specs(cfg)          -> logical-axis tree (mirrors params)
+  loss_fn(cfg, ...)         -> callable(params, batch) -> scalar
+  make_train_step(cfg, opt) -> callable(state, batch) -> (state, metrics)
+  make_prefill_step(cfg)    -> callable(params, batch) -> (logits, cache)
+  make_decode_step(cfg)     -> callable(params, cache, tokens) -> (logits, cache)
+  init_cache / cache_specs  -> per-family serve-state constructors
+  input_specs(cfg, shape)   -> ShapeDtypeStruct stand-ins for every input
+  batch_specs(cfg, shape)   -> logical-axis tree for the batch
+
+``input_specs`` is the dry-run contract: weak-type-correct, shardable, no
+device allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import encdec as E
+from repro.models import hymba as HY
+from repro.models import transformer as T
+from repro.models import xlstm as X
+from repro.optim import Optimizer, TrainState
+
+TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+# --------------------------------------------------------------------------
+# init / specs
+# --------------------------------------------------------------------------
+def init(cfg: ModelConfig, rng: jax.Array):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return T.init_decoder(cfg, rng)
+    if cfg.family == "encdec":
+        return E.init_encdec(cfg, rng)
+    if cfg.family == "ssm":
+        return X.init_xlstm(cfg, rng)
+    if cfg.family == "hybrid":
+        return HY.init_hymba(cfg, rng)
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return T.decoder_param_specs(cfg)
+    if cfg.family == "encdec":
+        return E.encdec_param_specs(cfg)
+    if cfg.family == "ssm":
+        return X.xlstm_param_specs(cfg)
+    if cfg.family == "hybrid":
+        return HY.hymba_param_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+
+
+# --------------------------------------------------------------------------
+# loss / train step
+# --------------------------------------------------------------------------
+def loss_fn(cfg: ModelConfig, *, attn_impl: str = "einsum",
+            remat_policy: str = "dots", loss_chunk: int = 0,
+            moe_impl: str = "scan") -> Callable[[Any, dict], jax.Array]:
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return functools.partial(T.decoder_loss, cfg, attn_impl=attn_impl,
+                                 remat_policy=remat_policy,
+                                 loss_chunk=loss_chunk, moe_impl=moe_impl)
+    if cfg.family == "encdec":
+        return functools.partial(E.encdec_loss, cfg, attn_impl=attn_impl,
+                                 remat_policy=remat_policy)
+    if cfg.family == "ssm":
+        return functools.partial(X.xlstm_loss, cfg,
+                                 remat_policy=remat_policy)
+    if cfg.family == "hybrid":
+        return functools.partial(HY.hymba_loss, cfg, attn_impl=attn_impl,
+                                 remat_policy=remat_policy)
+    raise ValueError(cfg.family)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    train_cfg: Optional[TrainConfig] = None,
+                    attn_impl: str = "einsum"):
+    tc = train_cfg or TrainConfig()
+    lf = loss_fn(cfg, attn_impl=attn_impl, remat_policy=tc.remat_policy,
+                 loss_chunk=tc.loss_chunk, moe_impl=tc.moe_impl)
+
+    def _grads(params, batch):
+        if tc.grad_accum <= 1:
+            return jax.value_and_grad(lf)(params, batch)
+        # Gradient accumulation: scan over microbatches (the standard
+        # memory/throughput trade at scale — activation footprint / n).
+        n = tc.grad_accum
+        from repro.distributed.sharding import constraint
+
+        def _split(x):
+            assert x.shape[0] % n == 0, (x.shape, n)
+            y = x.reshape(n, x.shape[0] // n, *x.shape[1:])
+            return constraint(y, None, "batch",
+                              *([None] * (y.ndim - 2)))
+
+        # positions for M-RoPE are (3, B, S): microbatch on axis 1.
+        micro = {}
+        for k, v in batch.items():
+            if k == "positions":
+                y = v.reshape(v.shape[0], n, v.shape[1] // n, *v.shape[2:])
+                micro[k] = jnp.moveaxis(y, 1, 0)
+            else:
+                micro[k] = _split(v)
+
+        adt = jnp.dtype(tc.accum_dtype)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, adt), params)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            loss, g = jax.value_and_grad(lf)(params, mb)
+            gsum = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(adt), gsum, g)
+            return (gsum, lsum + loss), None
+
+        (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
+        return lsum / n, grads
+
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = _grads(state.params, batch)
+        new_params, new_opt, om = opt.update(grads, state.opt_state,
+                                             state.params, state.step)
+        metrics = {"loss": loss, **om}
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt: Optimizer,
+                     rng: jax.Array) -> TrainState:
+    params = init(cfg, rng)
+    return TrainState(jnp.zeros((), jnp.int32), params, opt.init(params))
+
+
+def abstract_train_state(cfg: ModelConfig, opt: Optimizer) -> TrainState:
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, opt, jax.random.PRNGKey(0)))
+
+
+def train_state_specs(cfg: ModelConfig, opt: Optimizer):
+    ps = param_specs(cfg)
+    return TrainState(step=(), params=ps, opt_state=opt.state_specs(ps))
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return T.init_cache(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return E.init_encdec_cache(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return X.init_xlstm_state(cfg, batch)
+    if cfg.family == "hybrid":
+        return HY.init_hymba_cache(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def cache_specs(cfg: ModelConfig):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return T.cache_specs(cfg)
+    if cfg.family == "encdec":
+        return E.encdec_cache_specs(cfg)
+    if cfg.family == "ssm":
+        return X.xlstm_state_specs(cfg)
+    if cfg.family == "hybrid":
+        return HY.hymba_cache_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def make_prefill_step(cfg: ModelConfig, attn_impl: str = "chunked"):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        def prefill(params, batch):
+            return T.decoder_prefill(
+                cfg, params, batch["tokens"],
+                positions=batch.get("positions"),
+                vision_embeds=batch.get("vision_embeds"),
+                attn_impl=attn_impl)
+        return prefill
+    if cfg.family == "encdec":
+        def prefill(params, batch):
+            return E.encdec_prefill(cfg, params, batch["tokens"],
+                                    batch["frames"], attn_impl=attn_impl)
+        return prefill
+    if cfg.family == "ssm":
+        def prefill(params, batch):
+            return X.xlstm_prefill(cfg, params, batch["tokens"])
+        return prefill
+    if cfg.family == "hybrid":
+        def prefill(params, batch):
+            return HY.hymba_prefill(cfg, params, batch["tokens"],
+                                    attn_impl=attn_impl)
+        return prefill
+    raise ValueError(cfg.family)
+
+
+def make_decode_step(cfg: ModelConfig):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        def decode(params, cache, tokens, positions=None):
+            return T.decoder_decode(cfg, params, cache, tokens,
+                                    positions=positions)
+        return decode
+    if cfg.family == "encdec":
+        def decode(params, cache, tokens, positions=None):
+            return E.encdec_decode(cfg, params, cache, tokens)
+        return decode
+    if cfg.family == "ssm":
+        def decode(params, cache, tokens, positions=None):
+            return X.xlstm_decode(cfg, params, cache, tokens)
+        return decode
+    if cfg.family == "hybrid":
+        def decode(params, cache, tokens, positions=None):
+            return HY.hymba_decode(cfg, params, cache, tokens)
+        return decode
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------
+# input specs (dry-run contract)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+
+    if shape.mode == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        if cfg.mrope:
+            batch["positions"] = sds((3, B, S), i32)
+            batch["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model),
+                                         dt)
+        return {"batch": batch}
+
+    if shape.mode == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        if cfg.mrope:
+            batch["positions"] = sds((3, B, S), i32)
+            batch["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model),
+                                         dt)
+        return {"batch": batch}
+
+    if shape.mode == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, shape.kv_len))
+        out = {"tokens": sds((B, 1), i32), "cache": cache}
+        if cfg.mrope:
+            out["positions"] = sds((3, B, 1), i32)
+        return out
+
+    raise ValueError(shape.mode)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical-axis tree matching ``input_specs`` (for in_shardings)."""
+    tok = ("batch", "act_seq")
+    if shape.mode in ("train", "prefill"):
+        batch = {"tokens": tok}
+        if shape.mode == "train":
+            batch["labels"] = tok
+        if cfg.family == "encdec":
+            batch["frames"] = ("batch", None, None)
+        if cfg.mrope:
+            batch["positions"] = (None, "batch", "act_seq")
+            batch["vision_embeds"] = ("batch", None, None)
+        return {"batch": batch}
+    out = {"tokens": ("batch", None), "cache": cache_specs(cfg)}
+    if cfg.mrope:
+        out["positions"] = (None, "batch", None)
+    return out

@@ -1,0 +1,456 @@
+"""xLSTM backbone: mLSTM (matrix-memory, parallelizable) and sLSTM
+(scalar-memory, sequential) blocks interleaved 7:1 (xLSTM[7:1]).
+
+Training/prefill uses the stabilized parallel (quadratic) mLSTM form — the
+chunkwise-linear Pallas kernel (`repro.kernels.mlstm`) is the TPU hot path
+for long context. Decode uses the O(1)/token recurrent forms; there is no KV
+cache, only per-layer state — which is why this arch runs long_500k.
+
+Layout: layers are scanned in GROUPS of ``slstm_every`` (7 mLSTM + 1 sLSTM),
+preserving the interleave with stacked params: mLSTM params lead with
+(G, 7, ...), sLSTM with (G, ...).
+
+Simplifications recorded in DESIGN.md: the short causal conv preceding q/k in
+the reference mLSTM block is omitted; norms are RMSNorm.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models.transformer import padded_vocab
+
+PROJ_FACTOR = 2  # mLSTM up-projection factor
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = PROJ_FACTOR * d
+    nh = cfg.num_heads
+    dh = di // nh
+    return d, di, nh, dh
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def _init_mlstm_layer(ks, shape_prefix, cfg, dt):
+    d, di, nh, dh = _dims(cfg)
+    sp = shape_prefix
+    return {
+        "norm": jnp.ones(sp + (d,), dt),
+        "w_up": L.dense_init(next(ks), sp + (d, di), dt, d),
+        "w_z": L.dense_init(next(ks), sp + (d, di), dt, d),
+        "w_q": L.dense_init(next(ks), sp + (di, nh, dh), dt, di),
+        "w_k": L.dense_init(next(ks), sp + (di, nh, dh), dt, di),
+        "w_v": L.dense_init(next(ks), sp + (di, nh, dh), dt, di),
+        "w_if": L.dense_init(next(ks), sp + (di, 2, nh), dt, di),
+        "b_if": jnp.zeros(sp + (2, nh), dt),
+        "w_down": L.dense_init(next(ks), sp + (di, d), dt, di),
+    }
+
+
+def _init_slstm_layer(ks, shape_prefix, cfg, dt):
+    d, di, nh, dh = _dims(cfg)
+    dh_s = d // nh      # sLSTM operates at model width
+    sp = shape_prefix
+    return {
+        "norm": jnp.ones(sp + (d,), dt),
+        "w_gates": L.dense_init(next(ks), sp + (d, 4, nh, dh_s), dt, d),
+        "r_gates": L.dense_init(next(ks), sp + (4, nh, dh_s, dh_s), dt, dh_s),
+        "b_gates": jnp.zeros(sp + (4, nh, dh_s), dt),
+        "w_down": L.dense_init(next(ks), sp + (d, d), dt, d),
+    }
+
+
+def init_xlstm(cfg: ModelConfig, rng: jax.Array) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    V = padded_vocab(cfg)
+    per = cfg.slstm_every
+    G = cfg.num_layers // per
+    M = per - 1
+    ks = iter(jax.random.split(rng, 64))
+    return {
+        "embed": L.dense_init(next(ks), (V, cfg.d_model), dt, cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "mlstm": _init_mlstm_layer(ks, (G, M), cfg, dt),
+        "slstm": _init_slstm_layer(ks, (G,), cfg, dt),
+    }
+
+
+def xlstm_param_specs(cfg: ModelConfig) -> dict:
+    m = {
+        "norm": ("layers", "layers2", None),
+        "w_up": ("layers", "layers2", "w_data", "heads"),
+        "w_z": ("layers", "layers2", "w_data", "heads"),
+        "w_q": ("layers", "layers2", "w_data", None, "head_dim"),
+        "w_k": ("layers", "layers2", "w_data", None, "head_dim"),
+        "w_v": ("layers", "layers2", "w_data", None, "head_dim"),
+        "w_if": ("layers", "layers2", "w_data", None, None),
+        "b_if": ("layers", "layers2", None, None),
+        "w_down": ("layers", "layers2", "heads", "w_data"),
+    }
+    s = {
+        "norm": ("layers", None),
+        "w_gates": ("layers", "w_data", None, None, None),
+        "r_gates": ("layers", None, None, None, None),
+        "b_gates": ("layers", None, None, None),
+        "w_down": ("layers", "w_data", None),
+    }
+    return {"embed": ("vocab", "embed_d"), "final_norm": (None,),
+            "mlstm": m, "slstm": s}
+
+
+# --------------------------------------------------------------------------
+# mLSTM: stabilized parallel (train) + recurrent (decode)
+# --------------------------------------------------------------------------
+def mlstm_parallel(q, k, v, i_gate, f_gate):
+    """q/k/v: (B,S,nh,dh); i/f raw gate logits: (B,S,nh) -> h (B,S,nh,dh).
+
+    D[t,s] = cumlogsig(f)[t] - cumlogsig(f)[s] + i[s]  (s <= t), stabilized
+    per row; h = (exp(D - m) * (q k^T / sqrt(dh))) v / max(|row sum|, e^-m).
+    Mirrors ``repro.kernels.mlstm.ref``.
+    """
+    B, S, nh, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))       # (B,S,nh)
+    F = jnp.cumsum(logf, axis=1)
+    ii = i_gate.astype(jnp.float32)
+    D = (F[:, :, None, :] - F[:, None, :, :]
+         + ii[:, None, :, :])                                   # (B,t,s,nh)
+    t_idx = jnp.arange(S)
+    causal = t_idx[:, None] >= t_idx[None, :]
+    D = jnp.where(causal[None, :, :, None], D, -jnp.inf)
+    m = jnp.max(D, axis=2, keepdims=True)                       # (B,t,1,nh)
+    Dexp = jnp.exp(D - m)                                        # (B,t,s,nh)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (dh ** -0.5) * Dexp
+    norm = jnp.maximum(jnp.abs(scores.sum(axis=2)),
+                       jnp.exp(-m[:, :, 0, :]))                  # (B,t,nh)
+    h = jnp.einsum("btsh,bshd->bthd", scores, v,
+                   preferred_element_type=jnp.float32)
+    return (h / norm[..., None]).astype(v.dtype)
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, *, chunk: int = 1024):
+    """Blockwise mLSTM: identical math to ``mlstm_parallel`` but never
+    materializes the (S, S) gating matrix — O(S * chunk) live memory, the
+    XLA twin of the Pallas kernel (repro.kernels.mlstm). This is what makes
+    xlstm prefill_32k fit (71.8 GiB -> ~2 GiB per device, §Perf log).
+
+    Outer map over query chunks; inner scan over KV chunks with running
+    (m, n, acc) in the xLSTM stabilized form.
+    """
+    B, S, nh, dh = q.shape
+    if S % chunk != 0 or S <= chunk:
+        return mlstm_parallel(q, k, v, i_gate, f_gate)
+    nc = S // chunk
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    F = jnp.cumsum(logf, axis=1)                            # (B,S,nh)
+    ii = i_gate.astype(jnp.float32)
+    scale = dh ** -0.5
+
+    kc = k.reshape(B, nc, chunk, nh, dh)
+    vc = v.reshape(B, nc, chunk, nh, dh)
+    Fc = F.reshape(B, nc, chunk, nh)
+    ic = ii.reshape(B, nc, chunk, nh)
+    qc = q.reshape(B, nc, chunk, nh, dh)
+    pos = jnp.arange(S, dtype=jnp.int32).reshape(nc, chunk)
+
+    def one_q_chunk(args):
+        qi, Fq, qpos, idx = args              # (B,chunk,nh,dh) ...
+
+        def kv_body(carry, xs):
+            m, n, acc = carry
+            kj, vj, Fk, ik, kpos = xs
+            d = (Fq[:, :, None, :] - Fk[:, None, :, :]
+                 + ik[:, None, :, :])                      # (B,cq,ck,nh)
+            causal = qpos[:, None] >= kpos[None, :]
+            d = jnp.where(causal[None, :, :, None], d, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(d, axis=2))     # (B,cq,nh)
+            m_safe = jnp.maximum(m_new, -1e30)             # rows w/o keys yet
+            gate = jnp.exp(d - m_safe[:, :, None, :])
+            s = jnp.einsum("bthd,bshd->btsh", qi, kj,
+                           preferred_element_type=jnp.float32) * scale * gate
+            corr = jnp.exp(jnp.maximum(m, -1e30) - m_safe)
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            n2 = corr * n + jnp.sum(s, axis=2)
+            acc2 = corr[..., None] * acc + jnp.einsum(
+                "btsh,bshd->bthd", s, vj.astype(jnp.float32))
+            return (m_new, n2, acc2), None
+
+        m0 = jnp.full((B, chunk, nh), -jnp.inf, jnp.float32)
+        n0 = jnp.zeros((B, chunk, nh), jnp.float32)
+        a0 = jnp.zeros((B, chunk, nh, dh), jnp.float32)
+        (m, n, acc), _ = jax.lax.scan(
+            kv_body, (m0, n0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+             jnp.moveaxis(Fc, 1, 0), jnp.moveaxis(ic, 1, 0), pos))
+        denom = jnp.maximum(jnp.abs(n), jnp.exp(-m))
+        return (acc / denom[..., None]).astype(v.dtype)
+
+    out = jax.lax.map(one_q_chunk,
+                      (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(Fc, 1, 0),
+                       pos, jnp.arange(nc)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, nh, dh)
+
+
+def mlstm_step(state, q, k, v, i_gate, f_gate):
+    """Recurrent mLSTM. state: C (B,nh,dh,dh), n (B,nh,dh), m (B,nh).
+    q/k/v: (B,nh,dh); gates (B,nh). Returns (new_state, h (B,nh,dh))."""
+    C, n, m = state
+    dh = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    ii = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, ii)
+    f_s = jnp.exp(logf + m - m_new)[..., None]                 # (B,nh,1)
+    i_s = jnp.exp(ii - m_new)[..., None]
+    kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+    C = f_s[..., None] * C + i_s[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = f_s * n + i_s * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf * (dh ** -0.5), C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf * (dh ** -0.5), n)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h.astype(v.dtype)
+
+
+def mlstm_block(x, p, cfg, *, state=None):
+    """Pre-norm residual mLSTM block. ``state`` triggers the recurrent path
+    (decode, S==1); returns (out, new_state)."""
+    d, di, nh, dh = _dims(cfg)
+    h = L.rmsnorm(x, p["norm"])
+    up = jnp.einsum("bsd,de->bse", h, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"])
+    q = jnp.einsum("bse,ehd->bshd", up, p["w_q"])
+    k = jnp.einsum("bse,ehd->bshd", up, p["w_k"])
+    v = jnp.einsum("bse,ehd->bshd", up, p["w_v"])
+    gates = jnp.einsum("bse,egh->bsgh", up, p["w_if"]) + p["b_if"]
+    i_g, f_g = gates[:, :, 0], gates[:, :, 1]                   # (B,S,nh)
+    if state is None:
+        hh = mlstm_chunked(q, k, v, i_g, f_g)
+        new_state = None
+    else:
+        (C, n, m) = state
+        new_state, h1 = mlstm_step((C, n, m), q[:, 0], k[:, 0], v[:, 0],
+                                   i_g[:, 0], f_g[:, 0])
+        hh = h1[:, None]
+    out = hh.reshape(hh.shape[0], hh.shape[1], di) * jax.nn.silu(z)
+    return x + jnp.einsum("bse,ed->bsd", out, p["w_down"]), new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM: sequential scan (train) + single step (decode)
+# --------------------------------------------------------------------------
+def _slstm_cell(carry, gz):
+    """carry: (c, n, m, h_prev) each (B,nh,dh); gz: pre-activations
+    (B,4,nh,dh) BEFORE adding recurrence."""
+    c, n, m, h_prev, r = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, r)
+    zi, zf, zz, zo = [gz[:, j] + rec[:, j] for j in range(4)]
+    log_i = zi.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(zf.astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    zt = jnp.tanh(zz.astype(jnp.float32))
+    ot = jax.nn.sigmoid(zo.astype(jnp.float32))
+    c_new = f_s * c + i_s * zt
+    n_new = f_s * n + i_s
+    h = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h.astype(gz.dtype), r), h.astype(gz.dtype)
+
+
+def slstm_block(x, p, cfg, *, state=None):
+    """Sequential sLSTM over time. state (decode): (c, n, m, h_prev)."""
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    h_in = L.rmsnorm(x, p["norm"])
+    gz = jnp.einsum("bsd,dghe->bsghe", h_in, p["w_gates"]) + p["b_gates"]
+    if state is None:
+        z0 = jnp.zeros((B, nh, dh), jnp.float32)
+        carry0 = (z0, z0, jnp.full((B, nh, dh), -jnp.inf, jnp.float32),
+                  z0.astype(x.dtype), p["r_gates"])
+        carry, hs = jax.lax.scan(_slstm_cell, carry0,
+                                 jnp.moveaxis(gz, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)                              # (B,S,nh,dh)
+        new_state = None
+    else:
+        carry0 = (*state, p["r_gates"])
+        carry, h1 = _slstm_cell(carry0, gz[:, 0])
+        new_state = carry[:4]
+        hs = h1[:, None]
+    out = hs.reshape(B, -1, d)
+    return x + jnp.einsum("bsd,de->bse", out, p["w_down"]), new_state
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+def xlstm_hidden(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 remat_policy: str = "dots") -> jax.Array:
+    x = L.embed_tokens(params["embed"], tokens)
+    x = constraint(x, "batch", "act_seq", None)
+
+    def group_body(h, gp):
+        mp, sp = gp
+
+        def m_body(hh, lp):
+            out, _ = mlstm_block(hh, lp, cfg)
+            return out, None
+
+        h, _ = jax.lax.scan(m_body, h, mp)
+        h, _ = slstm_block(h, sp, cfg)
+        return h, None
+
+    if remat_policy != "none":
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, x, (params["mlstm"], params["slstm"]))
+    return L.rmsnorm(x, params["final_norm"])
+
+
+def xlstm_loss(cfg, params, batch, *, remat_policy="dots", **_):
+    hidden = xlstm_hidden(cfg, params, batch["tokens"], remat_policy)
+    logits = jnp.einsum("bsd,vd->bsv", hidden, params["embed"],
+                        preferred_element_type=jnp.float32)
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def init_xlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    """Recurrent decode state (no KV cache — O(1) in context length)."""
+    d, di, nh, dh = _dims(cfg)
+    dh_s = d // nh
+    per = cfg.slstm_every
+    G = cfg.num_layers // per
+    M = per - 1
+    f32 = jnp.float32
+    return {
+        "m_C": jnp.zeros((G, M, batch, nh, dh, dh), f32),
+        "m_n": jnp.zeros((G, M, batch, nh, dh), f32),
+        "m_m": jnp.zeros((G, M, batch, nh), f32),
+        "s_c": jnp.zeros((G, batch, nh, dh_s), f32),
+        "s_n": jnp.zeros((G, batch, nh, dh_s), f32),
+        "s_m": jnp.full((G, batch, nh, dh_s), -jnp.inf, f32),
+        "s_h": jnp.zeros((G, batch, nh, dh_s), jnp.dtype(cfg.dtype)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def xlstm_state_specs(cfg: ModelConfig) -> dict:
+    return {"m_C": ("layers", "layers2", "batch", None, None, None),
+            "m_n": ("layers", "layers2", "batch", None, None),
+            "m_m": ("layers", "layers2", "batch", None),
+            "s_c": ("layers", "batch", None, None),
+            "s_n": ("layers", "batch", None, None),
+            "s_m": ("layers", "batch", None, None),
+            "s_h": ("layers", "batch", None, None),
+            "pos": ()}
+
+
+def mlstm_final_state(q, k, v, i_gate, f_gate):
+    """Final recurrent state (C, n, m) equivalent to stepping through the
+    sequence — closed form from the parallel quantities (prefill->decode
+    handoff)."""
+    B, S, nh, dh = k.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    F = jnp.cumsum(logf, axis=1)                       # (B,S,nh)
+    ii = i_gate.astype(jnp.float32)
+    # weight of step s in the final state: F_S - F_s + i_s
+    w = F[:, -1:, :] - F + ii                          # (B,S,nh)
+    m = jnp.max(w, axis=1)                             # (B,nh)
+    wexp = jnp.exp(w - m[:, None, :])
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", wexp, kf, vf)
+    n = jnp.einsum("bsh,bshd->bhd", wexp, kf)
+    return C, n, m
+
+
+def xlstm_prefill(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    """Process the prompt in parallel, returning last-token logits plus the
+    recurrent state ready for decode."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens)
+    x = constraint(x, "batch", "act_seq", None)
+
+    def group_body(h, gp):
+        mp, sp = gp
+
+        def m_body(hh, lp):
+            d, di, nh, dh = _dims(cfg)
+            hn = L.rmsnorm(hh, lp["norm"])
+            up = jnp.einsum("bsd,de->bse", hn, lp["w_up"])
+            z = jnp.einsum("bsd,de->bse", hn, lp["w_z"])
+            q = jnp.einsum("bse,ehd->bshd", up, lp["w_q"])
+            k = jnp.einsum("bse,ehd->bshd", up, lp["w_k"])
+            v = jnp.einsum("bse,ehd->bshd", up, lp["w_v"])
+            gates = jnp.einsum("bse,egh->bsgh", up, lp["w_if"]) + lp["b_if"]
+            i_g, f_g = gates[:, :, 0], gates[:, :, 1]
+            hh_out = mlstm_chunked(q, k, v, i_g, f_g)
+            C, n, m = mlstm_final_state(q, k, v, i_g, f_g)
+            out = hh_out.reshape(hh_out.shape[0], hh_out.shape[1], di) \
+                * jax.nn.silu(z)
+            return hh + jnp.einsum("bse,ed->bsd", out, lp["w_down"]), (C, n, m)
+
+        h, (mC, mn, mm) = jax.lax.scan(m_body, h, mp)
+        # sLSTM: run the sequential scan, keep final carry
+        B_, S_, d_ = h.shape
+        nh = cfg.num_heads
+        dh_s = d_ // nh
+        h_in = L.rmsnorm(h, sp["norm"])
+        gz = jnp.einsum("bsd,dghe->bsghe", h_in, sp["w_gates"]) + sp["b_gates"]
+        z0 = jnp.zeros((B_, nh, dh_s), jnp.float32)
+        carry0 = (z0, z0, jnp.full((B_, nh, dh_s), -jnp.inf, jnp.float32),
+                  z0.astype(h.dtype), sp["r_gates"])
+        carry, hs = jax.lax.scan(_slstm_cell, carry0, jnp.moveaxis(gz, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)
+        h = h + jnp.einsum("bsd,de->bse", hs.reshape(B_, S_, d_),
+                           sp["w_down"])
+        return h, (mC, mn, mm, carry[0], carry[1], carry[2], carry[3])
+
+    x, states = jax.lax.scan(group_body, x,
+                             (params["mlstm"], params["slstm"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"],
+                        preferred_element_type=jnp.float32)
+    state = {"m_C": states[0], "m_n": states[1], "m_m": states[2],
+             "s_c": states[3], "s_n": states[4], "s_m": states[5],
+             "s_h": states[6], "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, state
+
+
+def xlstm_decode(cfg: ModelConfig, params: dict, state: dict,
+                 tokens: jax.Array):
+    """One decode step: tokens (B,1) -> (logits (B,V), new state)."""
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def group_body(h, xs):
+        mp, sp, mC, mn, mm, sc, sn, sm, sh = xs
+
+        def m_body(hh, lxs):
+            lp, C, n, m = lxs
+            out, (C2, n2, m2) = mlstm_block(hh, lp, cfg, state=(C, n, m))
+            return out, (C2, n2, m2)
+
+        h, (mC2, mn2, mm2) = jax.lax.scan(m_body, h, (mp, mC, mn, mm))
+        h, (sc2, sn2, sm2, sh2) = slstm_block(h, sp, cfg,
+                                              state=(sc, sn, sm, sh))
+        return h, (mC2, mn2, mm2, sc2, sn2, sm2, sh2)
+
+    x, news = jax.lax.scan(
+        group_body, x,
+        (params["mlstm"], params["slstm"], state["m_C"], state["m_n"],
+         state["m_m"], state["s_c"], state["s_n"], state["s_m"],
+         state["s_h"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                        preferred_element_type=jnp.float32)
+    new_state = {"m_C": news[0], "m_n": news[1], "m_m": news[2],
+                 "s_c": news[3], "s_n": news[4], "s_m": news[5],
+                 "s_h": news[6], "pos": state["pos"] + 1}
+    return logits[:, 0], new_state

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Adafactor, AdamW, Optimizer, Sgd,
+                                    TrainState, make_optimizer)
+from repro.optim.schedules import constant, cosine_schedule, linear_warmup
+
+__all__ = ["Adafactor", "AdamW", "Optimizer", "Sgd", "TrainState",
+           "make_optimizer", "constant", "cosine_schedule", "linear_warmup"]

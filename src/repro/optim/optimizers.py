@@ -1,0 +1,233 @@
+"""Pure-JAX optimizers with sharding-aware state.
+
+AdamW keeps float32 moments regardless of (bf16) param dtype — the standard
+mixed-precision recipe; moments inherit the parameter sharding specs so
+optimizer state is ZeRO-sharded for free under the FSDP rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+class Optimizer:
+    def init(self, params):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def update(self, grads, state, params, step):  # pragma: no cover
+        raise NotImplementedError
+
+    def state_specs(self, param_specs):
+        """Logical-axis specs for the optimizer state, mirroring params."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW(Optimizer):
+    schedule: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # Low-precision moments: the standard trick for fitting very large
+    # models' optimizer state in HBM (update math stays in float32).
+    moments_dtype: str = "float32"
+    # Stream the update over the leading (stacked-layer) axis of huge
+    # leaves so float32 intermediates never materialize at full leaf size.
+    update_chunk_threshold: int = 0   # 0 = off; else leaf bytes that trigger
+
+    def init(self, params):
+        dt = jnp.dtype(self.moments_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(self, grads, state, params, step):
+        if self.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        lr = self.schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+        mdt = jnp.dtype(self.moments_dtype)
+
+        def upd_math(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v2 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m2.astype(mdt), v2.astype(mdt))
+
+        def upd(g, m, v, p):
+            thresh = self.update_chunk_threshold
+            if (thresh and p.ndim >= 3 and p.shape[0] > 4
+                    and p.size * 4 > thresh):
+                # stream over the stacked-layer axis: f32 temps are 1/L-sized
+                return jax.lax.map(lambda a: upd_math(*a), (g, m, v, p))
+            return upd_math(g, m, v, p)
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                      params)
+        new_params = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda x: x[2], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}, {
+            "grad_norm": gnorm, "lr": lr}
+
+    def state_specs(self, param_specs):
+        return {"m": param_specs, "v": param_specs}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor(Optimizer):
+    """Factored second-moment optimizer (Shazeer & Stern 2018) — the
+    standard choice when a model's Adam state cannot fit HBM: v is stored as
+    per-row/per-column running means (O(rows+cols) instead of O(rows*cols)),
+    first moment omitted. State for a 235B model: ~params-size/4096."""
+
+    schedule: Callable[[jax.Array], jax.Array]
+    decay: float = 0.8          # \hat{beta2}_t = 1 - t^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+    def init(self, params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree_util.tree_map(
+            leaf, params, is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(self, grads, state, params, step):
+        if self.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        lr = self.schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay)
+
+        def upd(g, st, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + self.eps
+            if p.ndim >= 2:
+                vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = (vr[..., None] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True), self.eps)[..., None]) \
+                    * vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(denom + self.eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(v + self.eps)
+                new_st = {"v": v}
+            # update clipping by RMS (Adafactor's stabilizer)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_st
+
+        is_st = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        flat = jax.tree_util.tree_map(
+            upd, grads, state["f"], params,
+            is_leaf=lambda x: is_st(x))
+        tup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree_util.tree_map(lambda x: x[0], flat, is_leaf=tup)
+        new_f = jax.tree_util.tree_map(lambda x: x[1], flat, is_leaf=tup)
+        return new_params, {"f": new_f}, {"grad_norm": gnorm, "lr": lr}
+
+    def state_specs(self, param_specs):
+        def leaf(spec):
+            if len(spec) >= 2:
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+            return {"v": spec}
+        from repro.distributed.sharding import _is_spec_leaf
+        return {"f": jax.tree_util.tree_map(leaf, param_specs,
+                                            is_leaf=_is_spec_leaf)}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sgd(Optimizer):
+    schedule: Callable[[jax.Array], jax.Array]
+    momentum: float = 0.0
+    grad_clip: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {}
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(self, grads, state, params, step):
+        if self.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        lr = self.schedule(step)
+        if self.momentum == 0.0:
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, {}, {"grad_norm": gnorm, "lr": lr}
+        new_mom = jax.tree_util.tree_map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state["mom"], grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_mom)
+        return new_params, {"mom": new_mom}, {"grad_norm": gnorm, "lr": lr}
+
+    def state_specs(self, param_specs):
+        return {} if self.momentum == 0.0 else {"mom": param_specs}
+
+
+def make_optimizer(name: str, schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return AdamW(schedule=schedule, **kw)
+    if name == "adafactor":
+        kw.pop("moments_dtype", None)
+        return Adafactor(schedule=schedule, **kw)
+    if name == "sgd":
+        return Sgd(schedule=schedule, **kw)
+    raise ValueError(f"unknown optimizer {name}")

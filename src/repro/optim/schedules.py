@@ -1,0 +1,30 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1),
+                           1.0)
+        return jnp.float32(lr) * frac
+    return fn
+
+
+def cosine_schedule(lr: float, warmup_steps: int, total_steps: int,
+                    final_fraction: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((s - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * warm * cos
+    return fn

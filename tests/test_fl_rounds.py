@@ -1,0 +1,254 @@
+"""End-to-end FL orchestration tests (paper Fig. 4 + at-scale features)."""
+
+import numpy as np
+import pytest
+
+from repro.core.channel import BernoulliLoss, DropList, Link, NoLoss
+from repro.core.rounds import (FederatedSystem, FLClient, FLConfig,
+                               TransportConfig)
+from repro.core.simulator import Simulator
+
+SERVER = "10.1.2.5"
+
+
+def make_params(seed=0, n=300):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((n,)).astype(np.float32),
+            "b": np.zeros((7,), dtype=np.float32)}
+
+
+def const_train_fn(value):
+    """Train step that outputs constant parameters (analytically checkable)."""
+    def fn(params, round_idx, client):
+        return ({k: np.full_like(v, value) for k, v in params.items()},
+                {"loss": 0.0})
+    return fn
+
+
+def add_train_fn(delta):
+    def fn(params, round_idx, client):
+        return ({k: v + delta for k, v in params.items()}, {"loss": 0.0})
+    return fn
+
+
+def build(n_clients=2, loss_models=None, cfg=None, train_fns=None,
+          train_times=None, server_link=None):
+    sim = Simulator()
+    clients = []
+    for i in range(n_clients):
+        addr = f"10.1.2.{10 + i}"
+        lm = (loss_models or {}).get(addr, NoLoss())
+        up = Link(1e8, 1_000_000, lm)
+        down = Link(1e8, 1_000_000, NoLoss())
+        sim.connect(addr, SERVER, up, down)
+        fn = (train_fns or {}).get(addr, add_train_fn(1.0))
+        tt = (train_times or {}).get(addr, 1_000_000)
+        clients.append(FLClient(addr, fn, train_time_ns=tt))
+    system = FederatedSystem(sim, SERVER, clients, make_params(),
+                             cfg or FLConfig())
+    return sim, system, clients
+
+
+class TestFedAvg:
+    def test_uniform_average_of_constant_clients(self):
+        cfg = FLConfig(aggregation="fedavg")
+        sim, system, clients = build(
+            n_clients=3,
+            train_fns={"10.1.2.10": const_train_fn(1.0),
+                       "10.1.2.11": const_train_fn(2.0),
+                       "10.1.2.12": const_train_fn(3.0)})
+        res = system.run_round()
+        assert sorted(res.arrived) == ["10.1.2.10", "10.1.2.11", "10.1.2.12"]
+        np.testing.assert_allclose(system.global_params["w"], 2.0, atol=1e-6)
+
+    def test_weighted_average(self):
+        cfg = FLConfig(aggregation="fedavg")
+        sim, system, clients = build(
+            n_clients=2,
+            train_fns={"10.1.2.10": const_train_fn(0.0),
+                       "10.1.2.11": const_train_fn(4.0)},
+            cfg=cfg)
+        clients[0].weight = 3.0
+        clients[1].weight = 1.0
+        system.run_round()
+        np.testing.assert_allclose(system.global_params["w"], 1.0, atol=1e-6)
+
+
+class TestPairwiseEq1:
+    """Paper Eq. (1): sequential (client+server)/2 per arrival."""
+
+    def test_matches_hand_fold(self):
+        cfg = FLConfig(aggregation="pairwise")
+        g0 = make_params()
+        sim, system, _ = build(
+            n_clients=2,
+            train_fns={"10.1.2.10": const_train_fn(2.0),
+                       "10.1.2.11": const_train_fn(6.0)},
+            cfg=cfg)
+        system.run_round()
+        # fold in arrival order (same train time, same link -> .10 then .11)
+        expect = (g0["w"] + 2.0) / 2.0
+        expect = (expect + 6.0) / 2.0
+        np.testing.assert_allclose(system.global_params["w"], expect,
+                                   atol=1e-5)
+
+
+class TestRecoveryInsideFL:
+    def test_packet_loss_does_not_corrupt_global_model(self):
+        """MUDP recovers, so lossy links give the SAME global model as
+        lossless ones — the paper's central claim."""
+        drops = {f"10.1.2.{10 + i}": BernoulliLoss(p=0.2, seed=i)
+                 for i in range(3)}
+        cfg = FLConfig(aggregation="fedavg")
+        _, lossy, _ = build(3, loss_models=drops, cfg=cfg)
+        _, clean, _ = build(3, cfg=cfg)
+        lossy.run_round()
+        clean.run_round()
+        np.testing.assert_allclose(lossy.global_params["w"],
+                                   clean.global_params["w"], atol=1e-6)
+
+    def test_udp_with_loss_corrupts_the_update(self):
+        cfg = FLConfig(aggregation="fedavg",
+                       transport=TransportConfig(kind="udp", mtu=428,
+                                                 udp_deadline_ns=10**9))
+        drops = {"10.1.2.10": DropList({(2, 0)})}
+        _, lossy, _ = build(1, loss_models=drops, cfg=cfg,
+                            train_fns={"10.1.2.10": const_train_fn(5.0)})
+        lossy.run_round()
+        w = lossy.global_params["w"]
+        assert (w == 0.0).any(), "zero-filled gap expected"
+        assert not np.allclose(w, 5.0)
+
+
+class TestStragglerCutoff:
+    def test_deadline_excludes_slow_client(self):
+        cfg = FLConfig(aggregation="fedavg", round_deadline_ns=2_000_000_000)
+        sim, system, clients = build(
+            n_clients=2,
+            train_times={"10.1.2.10": 1_000_000,
+                         "10.1.2.11": 10_000_000_000},  # 10 s straggler
+            train_fns={"10.1.2.10": const_train_fn(1.0),
+                       "10.1.2.11": const_train_fn(100.0)},
+            cfg=cfg)
+        res = system.run_round()
+        assert res.arrived == ["10.1.2.10"]
+        np.testing.assert_allclose(system.global_params["w"], 1.0, atol=1e-6)
+
+    def test_late_update_folds_into_next_round_discounted(self):
+        cfg = FLConfig(aggregation="fedavg", round_deadline_ns=2_000_000_000,
+                       staleness_discount=0.5)
+        sim, system, clients = build(
+            n_clients=2,
+            train_times={"10.1.2.10": 1_000_000,
+                         "10.1.2.11": 5_000_000_000},
+            train_fns={"10.1.2.10": const_train_fn(1.0),
+                       "10.1.2.11": const_train_fn(9.0)},
+            cfg=cfg)
+        r0 = system.run_round()
+        assert r0.arrived == ["10.1.2.10"]
+        r1 = system.run_round()
+        assert r1.late_folded == 1
+        # round 1 contributions: fresh .10 (1.0, w=1), fresh .11 (9.0, w=1)
+        # if it finished in time, plus the stale round-0 .11 (9.0, w=0.5).
+        w = system.global_params["w"]
+        assert np.all(w > 1.0) and np.all(w < 9.0)
+
+
+class TestTransportFailureHealth:
+    def test_dead_client_is_benched_and_readmitted(self):
+        dead = {(s, a) for s in range(1, 2000) for a in range(0, 50)}
+        cfg = FLConfig(aggregation="fedavg",
+                       unhealthy_after_failures=1, readmit_after_rounds=2,
+                       transport=TransportConfig(timeout_ns=500_000_000))
+        sim, system, clients = build(
+            n_clients=2,
+            loss_models={"10.1.2.11": DropList(dead)},
+            train_fns={"10.1.2.10": const_train_fn(1.0),
+                       "10.1.2.11": const_train_fn(9.0)},
+            cfg=cfg)
+        r0 = system.run_round()
+        assert "10.1.2.11" in r0.failed
+        r1 = system.run_round()
+        assert "10.1.2.11" in r1.skipped_unhealthy
+        # readmitted after cool-down
+        r3_roster = system.pool.active(r0.round_idx + 4)
+        assert any(c.addr == "10.1.2.11" for c in r3_roster)
+
+
+class TestElasticPool:
+    def test_join_between_rounds(self):
+        cfg = FLConfig(aggregation="fedavg")
+        sim, system, clients = build(
+            1, cfg=cfg, train_fns={"10.1.2.10": const_train_fn(2.0)})
+        system.run_round()
+        addr = "10.1.2.99"
+        sim.connect(addr, SERVER, Link(1e8, 1_000_000), Link(1e8, 1_000_000))
+        newc = FLClient(addr, const_train_fn(4.0), train_time_ns=1_000_000)
+        system.add_client(newc)
+        res = system.run_round()
+        assert addr in res.arrived
+        np.testing.assert_allclose(system.global_params["w"], 3.0, atol=1e-6)
+
+    def test_leave_between_rounds(self):
+        cfg = FLConfig(aggregation="fedavg")
+        sim, system, clients = build(2, cfg=cfg)
+        system.run_round()
+        system.remove_client("10.1.2.11")
+        res = system.run_round()
+        assert res.arrived == ["10.1.2.10"]
+
+
+class TestDeltaAndCompression:
+    def test_delta_mode_equals_weight_mode_for_lossless(self):
+        cfgw = FLConfig(aggregation="fedavg", send_deltas=False)
+        cfgd = FLConfig(aggregation="fedavg", send_deltas=True)
+        _, sys_w, _ = build(2, cfg=cfgw)
+        _, sys_d, _ = build(2, cfg=cfgd)
+        sys_w.run_round()
+        sys_d.run_round()
+        np.testing.assert_allclose(sys_w.global_params["w"],
+                                   sys_d.global_params["w"], atol=1e-5)
+
+    def test_int8_compressed_round_close_to_lossless(self):
+        cfg8 = FLConfig(aggregation="fedavg",
+                        transport=TransportConfig(codec="int8"))
+        cfgr = FLConfig(aggregation="fedavg")
+        _, s8, _ = build(2, cfg=cfg8)
+        _, sr, _ = build(2, cfg=cfgr)
+        s8.run_round()
+        sr.run_round()
+        err = np.abs(s8.global_params["w"] - sr.global_params["w"]).max()
+        assert err < 0.05  # blockwise int8 on O(1) weights
+
+    def test_hex_codec_paper_faithful_roundtrip(self):
+        cfg = FLConfig(aggregation="fedavg",
+                       transport=TransportConfig(codec="hex"))
+        _, s, _ = build(2, cfg=cfg)
+        _, ref, _ = build(2, cfg=FLConfig(aggregation="fedavg"))
+        s.run_round()
+        ref.run_round()
+        np.testing.assert_allclose(s.global_params["w"],
+                                   ref.global_params["w"], atol=1e-7)
+
+    def test_hex_doubles_wire_bytes(self):
+        cfg_hex = FLConfig(transport=TransportConfig(codec="hex"))
+        cfg_raw = FLConfig(transport=TransportConfig(codec="raw"))
+        _, sh, _ = build(1, cfg=cfg_hex)
+        _, sr, _ = build(1, cfg=cfg_raw)
+        rh = sh.run_round()
+        rr = sr.run_round()
+        assert rh.bytes_sent > 1.8 * rr.bytes_sent
+
+
+class TestTcpTransport:
+    def test_tcp_round_completes_but_slower_than_mudp(self):
+        cfg_tcp = FLConfig(transport=TransportConfig(kind="tcp"))
+        cfg_mudp = FLConfig(transport=TransportConfig(kind="mudp"))
+        _, st_, _ = build(2, cfg=cfg_tcp)
+        _, sm, _ = build(2, cfg=cfg_mudp)
+        rt = st_.run_round()
+        rm = sm.run_round()
+        assert sorted(rt.arrived) == sorted(rm.arrived)
+        np.testing.assert_allclose(st_.global_params["w"],
+                                   sm.global_params["w"], atol=1e-6)
+        assert rt.duration_ns > rm.duration_ns  # handshake + windowing

@@ -1,0 +1,268 @@
+"""Per-kernel validation: pallas_call (interpret=True on CPU) vs pure-jnp
+oracle, swept over shapes and dtypes (hypothesis + parametrize)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.checksum.checksum import checksum_pallas
+from repro.kernels.checksum.ops import checksum_bytes, checksum_bytes_ref
+from repro.kernels.checksum.ref import chunksum32_jnp, chunksum32_np
+from repro.kernels.fedavg.fedavg import fedavg_pallas
+from repro.kernels.fedavg.ops import fedavg_trees, pairwise_average_flat
+from repro.kernels.fedavg.ref import fedavg_flat as fedavg_ref
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm.mlstm import mlstm_pallas
+from repro.kernels.mlstm.ref import mlstm_ref
+from repro.kernels.quantize.ops import dequantize_vector, quantize_vector
+from repro.kernels.quantize.quantize import (QBLOCK, dequantize_pallas,
+                                             quantize_pallas)
+from repro.kernels.quantize.ref import (dequantize_blockwise,
+                                        quantize_blockwise)
+
+
+class TestFedavgKernel:
+    @pytest.mark.parametrize("K,N", [(2, 100), (3, 16_384), (5, 70_000),
+                                     (16, 1_000), (1, 16_384)])
+    def test_matches_ref(self, K, N):
+        rng = np.random.default_rng(K * 1000 + N)
+        stack = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.1, 1.0, K), jnp.float32)
+        out = fedavg_pallas(stack, w, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(fedavg_ref(stack, w)),
+                                   rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(K=st.integers(1, 8), N=st.integers(1, 5000),
+           seed=st.integers(0, 99))
+    def test_property_sweep(self, K, N, seed):
+        rng = np.random.default_rng(seed)
+        stack = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.0, 1.0, K) + 1e-3, jnp.float32)
+        out = fedavg_pallas(stack, w, interpret=True, block_n=1024)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(fedavg_ref(stack, w)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_pairwise_matches_paper_eq1(self):
+        rng = np.random.default_rng(0)
+        s = rng.standard_normal(1000).astype(np.float32)
+        c = rng.standard_normal(1000).astype(np.float32)
+        out = pairwise_average_flat(s, c)
+        np.testing.assert_allclose(np.asarray(out), (s + c) / 2.0,
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_tree_api_matches_core_aggregation(self):
+        from repro.core.aggregation import fedavg as core_fedavg
+        rng = np.random.default_rng(1)
+        trees = [{"a": rng.standard_normal((10, 3)).astype(np.float32),
+                  "b": rng.standard_normal(7).astype(np.float32)}
+                 for _ in range(3)]
+        out = fedavg_trees(trees, [1.0, 2.0, 3.0])
+        ref = core_fedavg(trees, [1.0, 2.0, 3.0])
+        np.testing.assert_allclose(out["a"], ref["a"], rtol=1e-5, atol=1e-6)
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("nb", [1, 7, 8, 33])
+    def test_matches_ref(self, nb):
+        rng = np.random.default_rng(nb)
+        x = jnp.asarray(rng.standard_normal((nb, QBLOCK)) * 10, jnp.float32)
+        q, s = quantize_pallas(x, interpret=True)
+        qr, sr = quantize_blockwise(x)
+        # int8 codes may differ by 1 on exact-tie rounding of float noise
+        diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+        assert diff.max() <= 1 and (diff > 0).mean() < 1e-3
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+    @pytest.mark.parametrize("nb", [1, 9])
+    def test_dequant_roundtrip(self, nb):
+        rng = np.random.default_rng(nb + 50)
+        x = jnp.asarray(rng.standard_normal((nb, QBLOCK)), jnp.float32)
+        q, s = quantize_pallas(x, interpret=True)
+        out = dequantize_pallas(q, s, interpret=True)
+        ref = dequantize_blockwise(*quantize_blockwise(x))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-7)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 9000), scale=st.floats(1e-3, 1e3),
+           seed=st.integers(0, 99))
+    def test_vector_api_error_bound(self, n, scale, seed):
+        rng = np.random.default_rng(seed)
+        vec = (rng.standard_normal(n) * scale).astype(np.float32)
+        q, s, n_out = quantize_vector(vec)
+        back = np.asarray(dequantize_vector(q, s, n_out))
+        # matches the wire codec's numerics
+        from repro.core.compression import dequantize_int8, quantize_int8
+        qr, sr = quantize_int8(vec, QBLOCK)
+        ref = dequantize_int8(qr, sr, n, QBLOCK)
+        np.testing.assert_allclose(back, ref, rtol=1e-6, atol=1e-6)
+
+    def test_matches_transport_codec_exactly(self):
+        rng = np.random.default_rng(7)
+        vec = rng.standard_normal(5000).astype(np.float32)
+        from repro.core.compression import quantize_int8
+        q_kernel, s_kernel, _ = quantize_vector(vec)
+        q_codec, s_codec = quantize_int8(vec, QBLOCK)
+        np.testing.assert_array_equal(np.asarray(q_kernel).reshape(-1),
+                                      q_codec)
+        np.testing.assert_allclose(np.asarray(s_kernel), s_codec, rtol=1e-7)
+
+
+class TestChecksumKernel:
+    @pytest.mark.parametrize("n", [1, 100, 8192, 8193, 100_000])
+    def test_matches_ref(self, n):
+        rng = np.random.default_rng(n)
+        data = rng.integers(0, 256, n, dtype=np.uint8)
+        out = int(np.uint32(np.asarray(
+            checksum_pallas(jnp.asarray(data.astype(np.int32)),
+                            interpret=True))))
+        assert out == chunksum32_np(data)
+
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.binary(min_size=1, max_size=4096))
+    def test_bytes_api_property(self, data):
+        assert checksum_bytes(data) == checksum_bytes_ref(data)
+
+    def test_detects_single_byte_corruption(self):
+        rng = np.random.default_rng(3)
+        data = bytearray(rng.integers(0, 256, 2048, dtype=np.uint8))
+        ref = checksum_bytes(bytes(data))
+        data[777] = (data[777] + 1) % 256
+        assert checksum_bytes(bytes(data)) != ref
+
+    def test_detects_swap(self):
+        """Positional weighting catches transpositions plain sums miss."""
+        data = bytearray(b"\x01\x02" + b"\x00" * 100)
+        ref = checksum_bytes(bytes(data))
+        data[0], data[1] = data[1], data[0]
+        assert checksum_bytes(bytes(data)) != ref
+
+    def test_jnp_ref_matches_np_ref(self):
+        rng = np.random.default_rng(9)
+        data = rng.integers(0, 256, 5000, dtype=np.uint8)
+        a = int(np.uint32(np.asarray(
+            chunksum32_jnp(jnp.asarray(data.astype(np.int32))))))
+        assert a == chunksum32_np(data)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("B,H,S,hd,causal,window", [
+        (1, 2, 256, 64, True, 0),
+        (2, 1, 128, 128, True, 0),
+        (1, 2, 256, 64, True, 64),     # sliding window
+        (1, 1, 256, 64, False, 0),     # bidirectional (whisper encoder)
+        (2, 3, 384, 32, True, 128),
+    ])
+    def test_matches_ref(self, B, H, S, hd, causal, window):
+        rng = np.random.default_rng(S + hd)
+        q = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+        out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                     interpret=True)
+        ref = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(0)
+        mk = lambda: jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype)
+        q, k, v = mk(), mk(), mk()
+        out = flash_attention_pallas(q, k, v, interpret=True)
+        ref = attention_ref(q, k, v)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=tol, atol=tol)
+
+    def test_gqa_wrapper_matches_model_attention(self):
+        from repro.models import layers as L
+        rng = np.random.default_rng(1)
+        B, S, H, KV, hd = 2, 128, 8, 2, 64
+        q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = L.gqa_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(nq=st.integers(1, 4), hd=st.sampled_from([32, 64]),
+           seed=st.integers(0, 20))
+    def test_block_tiling_sweep(self, nq, hd, seed):
+        S = 128 * nq
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((1, 1, S, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 1, S, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 1, S, hd)), jnp.float32)
+        out = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestMlstmKernel:
+    @pytest.mark.parametrize("B,S,nh,dh", [
+        (1, 128, 2, 64), (2, 256, 1, 32), (1, 384, 4, 64),
+    ])
+    def test_matches_parallel_ref(self, B, S, nh, dh):
+        rng = np.random.default_rng(S)
+        q = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        ig = jnp.asarray(rng.standard_normal((B, S, nh)), jnp.float32)
+        fg = jnp.asarray(rng.standard_normal((B, S, nh)) + 2.0, jnp.float32)
+        out = mlstm_pallas(q, k, v, ig, fg, interpret=True)
+        ref = mlstm_ref(q, k, v, ig, fg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_matches_recurrent_stepping(self):
+        """Kernel == step-by-step recurrence (the decode path)."""
+        from repro.models.xlstm import mlstm_step
+        rng = np.random.default_rng(5)
+        B, S, nh, dh = 1, 128, 2, 32
+        q = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        ig = jnp.asarray(rng.standard_normal((B, S, nh)), jnp.float32)
+        fg = jnp.asarray(rng.standard_normal((B, S, nh)) + 1.0, jnp.float32)
+        C = jnp.zeros((B, nh, dh, dh))
+        n = jnp.zeros((B, nh, dh))
+        m = jnp.full((B, nh), -jnp.inf)
+        hs = []
+        state = (C, n, m)
+        for t in range(S):
+            state, h = mlstm_step(state, q[:, t], k[:, t], v[:, t],
+                                  ig[:, t], fg[:, t])
+            hs.append(h)
+        ref = jnp.stack(hs, axis=1)
+        out = mlstm_pallas(q, k, v, ig, fg, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 50), nh=st.integers(1, 3))
+    def test_property_sweep(self, seed, nh):
+        rng = np.random.default_rng(seed)
+        B, S, dh = 1, 256, 32
+        q = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, nh, dh)), jnp.float32)
+        ig = jnp.asarray(rng.standard_normal((B, S, nh)), jnp.float32)
+        fg = jnp.asarray(rng.standard_normal((B, S, nh)), jnp.float32)
+        out = mlstm_pallas(q, k, v, ig, fg, interpret=True)
+        ref = mlstm_ref(q, k, v, ig, fg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=5e-4, atol=5e-4)

@@ -1,0 +1,181 @@
+"""Substrate tests: optimizers, data pipeline, checkpointing, journal."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, FLJournal, load_pytree, \
+    save_pytree
+from repro.data import SyntheticMnist, TokenPipeline, federated_partitions
+from repro.optim import AdamW, Sgd, TrainState, constant, cosine_schedule
+
+
+class TestOptimizers:
+    def _quadratic(self, opt, steps=200):
+        target = jnp.asarray([1.5, -2.0, 0.5])
+        params = {"w": jnp.zeros(3)}
+
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2)
+
+        state = opt.init(params)
+        step = jnp.zeros((), jnp.int32)
+        for _ in range(steps):
+            g = jax.grad(loss)(params)
+            params, state, _ = opt.update(g, state, params, step)
+            step += 1
+        return float(loss(params))
+
+    def test_adamw_converges(self):
+        assert self._quadratic(AdamW(schedule=constant(0.05),
+                                     weight_decay=0.0)) < 1e-3
+
+    def test_sgd_momentum_converges(self):
+        assert self._quadratic(Sgd(schedule=constant(0.05),
+                                   momentum=0.9)) < 1e-3
+
+    def test_grad_clip_bounds_update(self):
+        opt = AdamW(schedule=constant(1.0), grad_clip=1e-3, weight_decay=0.0)
+        params = {"w": jnp.zeros(4)}
+        state = opt.init(params)
+        g = {"w": jnp.full((4,), 1e6)}
+        _, _, m = opt.update(g, state, params, jnp.zeros((), jnp.int32))
+        assert float(m["grad_norm"]) > 1e3  # reported pre-clip
+
+    def test_cosine_schedule_shape(self):
+        sch = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+        assert float(sch(jnp.asarray(0))) == 0.0
+        assert float(sch(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+        assert float(sch(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+
+    def test_adamw_moments_fp32_for_bf16_params(self):
+        opt = AdamW(schedule=constant(1e-3))
+        params = {"w": jnp.zeros(4, jnp.bfloat16)}
+        state = opt.init(params)
+        assert state["m"]["w"].dtype == jnp.float32
+
+
+class TestPipeline:
+    def test_deterministic_and_resumable(self):
+        p1 = TokenPipeline(100, 16, 4, seed=3)
+        p2 = TokenPipeline(100, 16, 4, seed=3)
+        b1, b2 = p1.batch(5), p2.batch(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        b = TokenPipeline(100, 16, 4, seed=0).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_learnable_structure(self):
+        """A bigram table fit on one batch beats uniform on the next."""
+        p = TokenPipeline(50, 256, 8, seed=1)
+        b0, b1 = p.batch(0), p.batch(1)
+        counts = np.ones((50, 50))
+        for row_t, row_l in zip(b0["tokens"].reshape(-1),
+                                b0["labels"].reshape(-1)):
+            counts[row_t, row_l] += 1
+        probs = counts / counts.sum(1, keepdims=True)
+        nll = -np.mean(np.log(probs[b1["tokens"].reshape(-1),
+                                    b1["labels"].reshape(-1)]))
+        assert nll < np.log(50) * 0.95
+
+    def test_worker_slices_partition(self):
+        p = TokenPipeline(100, 8, 8, seed=0)
+        b = p.batch(0)
+        slices = [p.worker_slice(b, w, 4) for w in range(4)]
+        recon = np.concatenate([s["tokens"] for s in slices])
+        np.testing.assert_array_equal(recon, b["tokens"])
+
+    def test_federated_partitions_iid_share_distribution(self):
+        ps = federated_partitions(100, 8, 4, 3, seed=0, non_iid=0.0)
+        np.testing.assert_allclose(ps[0]._table_logits, ps[1]._table_logits)
+
+    def test_federated_partitions_non_iid_differ(self):
+        ps = federated_partitions(100, 8, 4, 2, seed=0, non_iid=0.8)
+        assert np.abs(ps[0]._table_logits - ps[1]._table_logits).max() > 0.1
+
+    def test_mnist_templates_separable(self):
+        ds = SyntheticMnist(seed=0)
+        x, y = ds.sample(256, client=0, step=0)
+        assert x.shape == (256, 784)
+        # nearest-template classification is near perfect
+        t = ds.templates.reshape(10, -1)
+        pred = np.argmin(
+            ((x[:, None] - t[None]) ** 2).sum(-1), axis=1)
+        assert (pred == y).mean() > 0.9
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {"a": rng.standard_normal((4, 5)).astype(np.float32),
+                "nested": {"b": rng.integers(0, 10, (3,)).astype(np.int32),
+                           "c": jnp.asarray(rng.standard_normal((2, 2)),
+                                            jnp.bfloat16)}}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        p = str(tmp_path / "x.ckpt")
+        save_pytree(p, tree, {"round": 7})
+        out, meta = load_pytree(p, tree)
+        assert meta["round"] == 7
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        np.testing.assert_array_equal(out["nested"]["b"], tree["nested"]["b"])
+        np.testing.assert_array_equal(
+            np.asarray(out["nested"]["c"], np.float32),
+            np.asarray(tree["nested"]["c"], np.float32))
+
+    def test_atomicity_tmp_never_left(self, tmp_path):
+        p = str(tmp_path / "x.ckpt")
+        save_pytree(p, self._tree(), {})
+        assert not os.path.exists(p + ".tmp")
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        p = str(tmp_path / "x.ckpt")
+        save_pytree(p, self._tree(), {})
+        bad = self._tree()
+        bad["a"] = np.zeros((9, 9), np.float32)
+        with pytest.raises(ValueError):
+            load_pytree(p, bad)
+
+    def test_manager_retention_and_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree(s))
+        assert mgr.steps() == [3, 4]
+        out, meta = mgr.restore(self._tree())
+        assert meta["step"] == 4
+
+    def test_manager_restore_specific_step(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        for s in (1, 2):
+            mgr.save(s, self._tree(s))
+        out, meta = mgr.restore(self._tree(), step=1)
+        np.testing.assert_array_equal(out["a"], self._tree(1)["a"])
+
+
+class TestJournal:
+    def test_resume_round_after_crash(self, tmp_path):
+        p = str(tmp_path / "journal.jsonl")
+        j = FLJournal(p)
+        j.round_started(0, ["c1", "c2"])
+        j.update_ingested(0, "c1")
+        j.update_ingested(0, "c2")
+        j.round_finalized(0, "ckpt_0", ["c1", "c2"], [])
+        j.round_started(1, ["c1", "c2"])
+        j.update_ingested(1, "c1")
+        # crash here; new process reads the journal
+        j2 = FLJournal(p)
+        assert j2.last_finalized_round() == 0
+        assert j2.resume_round() == 1
+        assert j2.pending_clients() == ["c2"]
+        assert j2.last_checkpoint() == "ckpt_0"
+
+    def test_fresh_journal(self, tmp_path):
+        j = FLJournal(str(tmp_path / "j.jsonl"))
+        assert j.resume_round() == 0
+        assert j.pending_clients() == []

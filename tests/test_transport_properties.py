@@ -1,0 +1,184 @@
+"""Property-based invariants of the transport layer (hypothesis).
+
+The MUDP contract: for ANY pattern of data-packet loss in which each sequence
+number is droppable only finitely often, the receiver reconstructs the exact
+byte stream and the sender terminates; if the link is effectively dead, the
+sender fails after exactly Y=3 last-packet retries and never delivers a
+corrupted payload.
+"""
+
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import BernoulliLoss, DropList, Link
+from repro.core.compression import (HexCodec, Int8Codec, RawCodec, TopKCodec,
+                                    dequantize_int8, quantize_int8)
+from repro.core.mudp import MudpReceiver, MudpSender
+from repro.core.packetizer import (flatten_to_vector, packetize, reassemble,
+                                   unflatten_from_vector)
+from repro.core.packets import Packet, checksum32
+from repro.core.simulator import Simulator
+
+C, S = "10.0.0.1", "10.0.0.2"
+
+
+def _run(data: bytes, loss_model, mtu=156, timeout_ns=5_000_000_000):
+    sim = Simulator()
+    sim.connect(C, S, Link(1e7, 50_000_000, loss_model), Link(1e7, 50_000_000))
+    pkts = packetize(data, C, txn=7, mtu=mtu)
+    got, outcome = {}, {}
+    MudpReceiver(sim, sim.node(S), nack_timeout_ns=timeout_ns,
+                 on_deliver=lambda a, t, p: got.update(p))
+    MudpSender(sim, sim.node(C), sim.node(S), pkts, timeout_ns=timeout_ns,
+               on_complete=lambda s: outcome.update(ok=True),
+               on_fail=lambda s: outcome.update(ok=False)).start()
+    sim.run()
+    return got, outcome, pkts
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.binary(min_size=1, max_size=4096),
+    drops=st.sets(st.tuples(st.integers(1, 40), st.integers(0, 2)),
+                  max_size=30),
+)
+def test_any_finite_drop_pattern_delivers_exact_bytes(data, drops):
+    got, outcome, pkts = _run(data, DropList(drops))
+    # Droppable at most 3 attempts per seq (0..2) < sender+receiver retry
+    # budget, so delivery is guaranteed.
+    assert outcome["ok"] is True
+    assert reassemble(got) == data
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.binary(min_size=1, max_size=2048),
+       p=st.floats(0.0, 0.4), seed=st.integers(0, 2**31))
+def test_bernoulli_loss_delivery_or_clean_failure(data, p, seed):
+    got, outcome, _ = _run(data, BernoulliLoss(p=p, seed=seed))
+    if outcome["ok"]:
+        assert reassemble(got) == data
+    else:
+        # Failure is only legal after exhausting the retry budget; the
+        # receiver must never have delivered (no partial delivery).
+        assert got == {} or reassemble(got) == data
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.binary(min_size=0, max_size=8192),
+       mtu=st.integers(60, 2000))
+def test_packetize_reassemble_roundtrip(data, mtu):
+    pkts = packetize(data, C, txn=1, mtu=mtu)
+    assert pkts[0].total == len(pkts)
+    assert all(p.seq == i + 1 for i, p in enumerate(pkts))
+    assert reassemble({p.seq: p for p in pkts}) == data
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec=st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                    min_size=0, max_size=600))
+def test_lossless_codecs_roundtrip(vec):
+    v = np.asarray(vec, dtype=np.float32)
+    for codec in (RawCodec(), HexCodec()):
+        out = codec.decode(codec.encode(v))
+        np.testing.assert_array_equal(out, v)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec=st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                    min_size=1, max_size=3000),
+       block=st.sampled_from([64, 256, 1024]))
+def test_int8_quantization_error_bound(vec, block):
+    v = np.asarray(vec, dtype=np.float32)
+    q, scales = quantize_int8(v, block)
+    out = dequantize_int8(q, scales, v.size, block)
+    # absmax blockwise quantization: |err| <= scale/2 = absmax/254 per block
+    nb = -(-v.size // block)
+    padded = np.zeros(nb * block, np.float32)
+    padded[:v.size] = v
+    absmax = np.abs(padded.reshape(nb, block)).max(axis=1)
+    bound = np.repeat(np.maximum(absmax, 1e-12) / 127.0, block)[:v.size]
+    assert np.all(np.abs(out - v) <= 0.5 * bound + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(vec=st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                    min_size=1, max_size=1000))
+def test_int8_codec_wire_roundtrip(vec):
+    v = np.asarray(vec, dtype=np.float32)
+    codec = Int8Codec(block=128)
+    out = codec.decode(codec.encode(v))
+    assert out.shape == v.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 500), frac=st.floats(0.01, 1.0),
+       seed=st.integers(0, 1000))
+def test_topk_codec_keeps_largest(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal(n).astype(np.float32)
+    codec = TopKCodec(k_fraction=frac)
+    out = codec.decode(codec.encode(v))
+    k = max(1, int(n * frac))
+    kept = np.flatnonzero(out)
+    assert len(kept) <= k
+    # every kept value is exact
+    np.testing.assert_array_equal(out[kept], v[kept])
+    # smallest kept magnitude >= largest dropped magnitude
+    dropped = np.setdiff1d(np.arange(n), kept)
+    if kept.size and dropped.size:
+        assert np.abs(v[kept]).min() >= np.abs(v[dropped]).max() - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1, max_size=6),
+    seed=st.integers(0, 100))
+def test_pytree_vector_roundtrip(shapes, seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"w{i}": rng.standard_normal(s).astype(np.float32)
+            for i, s in enumerate(shapes)}
+    vec = flatten_to_vector(tree)
+    back = unflatten_from_vector(vec, tree)
+    for k in tree:
+        np.testing.assert_array_equal(back[k], tree[k])
+
+
+def test_corrupted_payload_is_rejected():
+    data = b"x" * 500
+    pkts = packetize(data, C, txn=0, mtu=156)
+    bad = dataclasses.replace(pkts[1], payload=b"y" * len(pkts[1].payload))
+    assert not bad.verify()
+    # The receiver treats a checksum failure as loss -> NACK path recovers.
+    sim = Simulator()
+
+    class CorruptSecondOnce:
+        done = False
+        def drops(self, pkt):
+            return False
+
+    sim.connect(C, S, Link(1e7, 1_000_000), Link(1e7, 1_000_000))
+    got = {}
+    MudpReceiver(sim, sim.node(S), nack_timeout_ns=1_000_000_000,
+                 on_deliver=lambda a, t, p: got.update(p))
+    outcome = {}
+    sender = MudpSender(sim, sim.node(C), sim.node(S), pkts,
+                        timeout_ns=1_000_000_000,
+                        on_complete=lambda s: outcome.update(ok=True))
+    # Corrupt the stored copy for the first transmission only: emulate by
+    # sending the bad packet manually before starting (receiver drops it).
+    sim.node(C).send(bad, sim.node(S))
+    sender.start()
+    sim.run()
+    assert outcome["ok"] is True
+    assert reassemble(got) == data
+
+
+def test_packet_wire_codec_roundtrip():
+    p = Packet.from_bytes(
+        packetize(b"hello world", "10.1.2.4", txn=3, mtu=100)[0].to_bytes())
+    assert p.payload == b"hello world"
+    assert p.addr == "10.1.2.4"
+    assert p.txn == 3
+    assert p.verify()
