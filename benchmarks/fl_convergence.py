@@ -93,6 +93,7 @@ def bench():
     rows = []
     for name, tr, p in (("lossless_mudp", "mudp", 0.0),
                         ("lossy10_mudp", "mudp", 0.1),
+                        ("lossy10_mudp+fec", "mudp+fec", 0.1),
                         ("lossy10_udp", "udp", 0.1)):
         t0 = time.perf_counter()
         acc, system = run(tr, p)

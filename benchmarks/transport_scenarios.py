@@ -1,59 +1,78 @@
-"""Benchmark 1 — paper §V test cases (Figs 5-7), quantified.
+"""Benchmark 1 — paper §V test cases (Figs 5-7), quantified, for every
+registered transport.
 
-For each scenario: simulated transaction duration, data packets sent,
-retransmissions, NACKs, and timer-path retries. The paper reports ~17.5 s
-for the triple-loss case on its 5 Mbps / 2000 ms link; the same scenario
-lands in that band here.
+For each (transport, scenario): simulated transaction duration, data packets
+sent, retransmissions, and delivery completeness through the unified
+``Delivery`` contract. The paper reports ~17.5 s for the triple-loss case on
+its 5 Mbps / 2000 ms link with MUDP; the same scenario lands in that band
+here. Reliable transports must deliver the exact bytes; the UDP baseline
+reports whatever fraction survived.
+
+Iterates ``available_transports()`` so newly registered protocols (e.g.
+``mudp+fec``) are measured on the paper's scenarios for free.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core.channel import DropList, Link, NoLoss
-from repro.core.mudp import MudpReceiver, MudpSender
-from repro.core.packetizer import packetize, reassemble
+from repro.core import TransportConfig, available_transports, make_transport
+from repro.core.channel import DropList, Link
+from repro.core.packetizer import packetize
 from repro.core.simulator import Simulator
 
 CLIENT, SERVER = "10.1.2.4", "10.1.2.5"
 RATE, DELAY = 5_000_000.0, 2_000_000_000
 
+CASES = {
+    "tc1_drop_pkt2": {(2, 0)},
+    "tc2_drop_tail": {(2, 0), (3, 0), (4, 0)},
+    "tc3_lossless": set(),
+}
 
-def run_case(drops):
+
+def run_case(transport_name: str, drops):
+    cfg = TransportConfig(kind=transport_name, timeout_ns=6_000_000_000,
+                          udp_deadline_ns=30_000_000_000, fec_block=4)
+    transport = make_transport(transport_name)
     sim = Simulator()
     sim.connect(CLIENT, SERVER, Link(RATE, DELAY, DropList(drops)),
                 Link(RATE, DELAY))
     data = bytes(range(256)) * 18  # ~4.6KB -> 4 packets at MTU 1228
     pkts = packetize(data, CLIENT, mtu=1228)
     assert len(pkts) == 4
-    got, ok = {}, {}
-    rx = MudpReceiver(sim, sim.node(SERVER),
-                      on_deliver=lambda a, t, p: got.update(p))
-    tx = MudpSender(sim, sim.node(CLIENT), sim.node(SERVER), pkts,
-                    timeout_ns=6_000_000_000,
-                    on_complete=lambda s: ok.update(v=True))
+    got, outcome = {}, {}
+    rx = transport.create_receiver(sim, sim.node(SERVER), cfg,
+                                   lambda d: got.update(d=d))
+    tx = transport.create_sender(sim, sim.node(CLIENT), sim.node(SERVER),
+                                 pkts, cfg,
+                                 on_complete=lambda s: outcome.update(ok=True),
+                                 on_fail=lambda s: outcome.update(ok=False))
     tx.start()
     sim.run()
-    assert ok.get("v") and reassemble(got) == data
-    return tx, rx
+    d = got.get("d")
+    if transport.caps.reliable:
+        assert outcome.get("ok") and d is not None and d.complete
+        assert d.reassemble() == data
+    return tx, rx, d
 
 
 def bench():
     rows = []
-    cases = {
-        "tc1_drop_pkt2": {(2, 0)},
-        "tc2_drop_tail": {(2, 0), (3, 0), (4, 0)},
-        "tc3_lossless": set(),
-    }
-    for name, drops in cases.items():
-        t0 = time.perf_counter()
-        tx, rx = run_case(drops)
-        wall_us = (time.perf_counter() - t0) * 1e6
-        rows.append((f"transport_scenarios/{name}", wall_us,
-                     f"sim_s={tx.stats.duration_ns/1e9:.2f}"
-                     f";retx={tx.stats.retransmissions}"
-                     f";nacks={rx.stats_nacks_sent}"
-                     f";timer_retries={tx.stats.last_packet_retries}"))
+    for name in available_transports():
+        for case, drops in CASES.items():
+            t0 = time.perf_counter()
+            tx, rx, d = run_case(name, drops)
+            wall_us = (time.perf_counter() - t0) * 1e6
+            delivered = 0 if d is None else len(d.packets)
+            total = 4 if d is None else d.total
+            rows.append((f"transport_scenarios/{name}_{case}", wall_us,
+                         f"sim_s={tx.stats.duration_ns/1e9:.2f}"
+                         f";sent={tx.stats.data_sent}"
+                         f";retx={tx.stats.retransmissions}"
+                         f";parity={tx.stats.parity_sent}"
+                         f";nacks={getattr(rx, 'stats_nacks_sent', 0)}"
+                         f";delivered={delivered}/{total}"))
     return rows
 
 

@@ -1,19 +1,35 @@
-"""Core paper contribution: Modified UDP transport + FL orchestration."""
+"""Core paper contribution: Modified UDP transport + FL orchestration.
+
+Transports are pluggable: every protocol implements the ``Transport``
+interface (``repro.core.transport``) and registers under a string key, the
+FL orchestrator (``repro.core.rounds``) dispatches purely through the
+registry, and receivers hand the application one unified ``Delivery``
+record whatever the protocol.  Built-ins: ``mudp`` (the paper's protocol),
+``udp``/``tcp`` baselines, and ``mudp+fec`` (MUDP + XOR parity, the paper's
+future-work optimization).  See ``docs/TRANSPORTS.md`` for the contract and
+a write-your-own walkthrough.
+"""
 
 from repro.core.aggregation import fedavg, pairwise_average, trimmed_mean
 from repro.core.channel import (BernoulliLoss, DropList, GilbertElliott, Link,
                                 NoLoss, DCN_LINK, PAPER_LINK, WAN_LINK)
 from repro.core.compression import (Codec, HexCodec, Int8Codec, RawCodec,
                                     TopKCodec, make_codec)
+from repro.core.fec import (FecMudpReceiver, FecMudpSender, FecMudpTransport,
+                            parity_groups)
 from repro.core.mudp import MudpReceiver, MudpSender, TxnStats
 from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
                                    reassemble, unflatten_from_vector)
 from repro.core.packets import (Packet, PacketKind, make_ack_ok,
                                 make_data_packet, make_nack)
 from repro.core.rounds import (FederatedSystem, FLClient, FLConfig,
-                               RoundResult, TransportConfig)
+                               RoundResult)
 from repro.core.simulator import Node, Simulator
 from repro.core.tcp import TcpReceiver, TcpSender
+from repro.core.transport import (Delivery, Transport, TransportCaps,
+                                  TransportConfig, available_transports,
+                                  make_transport, register_transport,
+                                  validate_transport_kind)
 from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
 
 __all__ = [
@@ -21,13 +37,16 @@ __all__ = [
     "BernoulliLoss", "DropList", "GilbertElliott", "Link", "NoLoss",
     "DCN_LINK", "PAPER_LINK", "WAN_LINK",
     "Codec", "HexCodec", "Int8Codec", "RawCodec", "TopKCodec", "make_codec",
+    "FecMudpReceiver", "FecMudpSender", "FecMudpTransport", "parity_groups",
     "MudpReceiver", "MudpSender", "TxnStats",
     "Packetizer", "flatten_to_vector", "packetize", "reassemble",
     "unflatten_from_vector",
     "Packet", "PacketKind", "make_ack_ok", "make_data_packet", "make_nack",
     "FederatedSystem", "FLClient", "FLConfig", "RoundResult",
-    "TransportConfig",
     "Node", "Simulator",
     "TcpReceiver", "TcpSender",
+    "Delivery", "Transport", "TransportCaps", "TransportConfig",
+    "available_transports", "make_transport", "register_transport",
+    "validate_transport_kind",
     "UdpReceiver", "UdpSender", "reassemble_partial",
 ]

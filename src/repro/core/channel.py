@@ -19,6 +19,12 @@ from repro.core.packets import Packet, PacketKind
 
 NS_PER_SEC = 1_000_000_000
 
+# Payload-bearing kinds are subject to stochastic loss; small control packets
+# (ACK/NACK/SYN/...) only drop when drop_control=True. FEC parity rides the
+# same links as data and must be just as losable, or comparisons against
+# non-FEC transports would be biased.
+_PAYLOAD_KINDS = frozenset({PacketKind.DATA, PacketKind.PARITY})
+
 
 # --------------------------------------------------------------------------
 # Loss models
@@ -69,7 +75,7 @@ class BernoulliLoss(LossModel):
     def drops(self, pkt: Packet) -> bool:
         if self.p <= 0.0:
             return False
-        if not self.drop_control and pkt.kind != PacketKind.DATA:
+        if not self.drop_control and pkt.kind not in _PAYLOAD_KINDS:
             return False
         key = (self.seed, pkt.txn, int(pkt.kind), pkt.seq, pkt.attempt)
         return random.Random(hash(key)).random() < self.p
@@ -91,7 +97,7 @@ class GilbertElliott(LossModel):
     drop_control: bool = False
 
     def drops(self, pkt: Packet) -> bool:
-        if not self.drop_control and pkt.kind != PacketKind.DATA:
+        if not self.drop_control and pkt.kind not in _PAYLOAD_KINDS:
             return False
         key = (self.seed, pkt.txn, int(pkt.kind), pkt.seq, pkt.attempt)
         rng = random.Random(hash(key))

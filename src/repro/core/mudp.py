@@ -42,6 +42,7 @@ class TxnStats:
     end_ns: int = 0
     data_sent: int = 0
     retransmissions: int = 0
+    parity_sent: int = 0          # FEC redundancy (mudp+fec), not data
     last_packet_retries: int = 0  # the paper's Y counter
     nacks_sent: int = 0
     nacks_received: int = 0
@@ -122,7 +123,10 @@ class MudpSender:
 
     # -- acknowledgement handling ------------------------------------------
     def _on_packet(self, pkt: Packet) -> bool:
-        if self._done or pkt.txn != self.txn:
+        # Match on (txn, responder): a server broadcast runs one sender per
+        # client under the SAME txn on one node, and another client's
+        # ACK/NACK must not complete or steer this transaction.
+        if self._done or pkt.txn != self.txn or pkt.addr != self.dest.addr:
             return False
         if pkt.kind == PacketKind.ACK_OK:
             # "(0, 0, A) ... all packets have been received and the

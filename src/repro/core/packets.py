@@ -39,6 +39,9 @@ class PacketKind(enum.IntEnum):
     # FL orchestration control.
     ROUND_BEGIN = 7
     HEARTBEAT = 8
+    # Forward-error-correction (mudp+fec): XOR parity over a block of DATA
+    # packets, header (parity_index, n_parity, A).
+    PARITY = 9
 
 
 # Wire header: kind(B) seq(I) total(I) txn(I) payload_len(I) checksum(I) = 21B,

@@ -13,7 +13,8 @@ Beyond the paper (required at thousand-node scale):
  * elastic client pool with health tracking (transport failures demote a
    client; it is re-admitted after a cool-down);
  * delta transmission + lossy codecs with error feedback;
- * pluggable transport (mudp | udp | tcp) and aggregation
+ * pluggable transport (any name in ``available_transports()``, dispatched
+   through the ``repro.core.transport`` registry) and aggregation
    (pairwise | fedavg | trimmed_mean).
 """
 
@@ -26,29 +27,17 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core.compression import ErrorFeedback, make_codec
-from repro.core.mudp import MudpReceiver, MudpSender
 from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
                                    unflatten_from_vector)
 from repro.core.simulator import Simulator
-from repro.core.tcp import TcpReceiver, TcpSender
-from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
-from repro.core import packetizer as pktz
+from repro.core.transport import (Delivery, Transport, TransportConfig,
+                                  make_transport, validate_transport_kind)
 
 
 # --------------------------------------------------------------------------
-# Configuration
+# Configuration (TransportConfig lives with the transport registry and is
+# re-exported here for backward compatibility)
 # --------------------------------------------------------------------------
-@dataclasses.dataclass
-class TransportConfig:
-    kind: str = "mudp"                  # mudp | udp | tcp
-    codec: str = "raw"                  # raw | hex | int8 | topk
-    codec_kwargs: dict = dataclasses.field(default_factory=dict)
-    mtu: int = 1500
-    timeout_ns: int = 6_000_000_000     # sender/NACK timer (paper's timer)
-    max_retries: int = 3                # the paper's Y
-    udp_deadline_ns: int = 30_000_000_000
-
-
 @dataclasses.dataclass
 class FLConfig:
     transport: TransportConfig = dataclasses.field(
@@ -62,6 +51,11 @@ class FLConfig:
     staleness_discount: float = 0.5      # late update weight *= discount^age
     unhealthy_after_failures: int = 2
     readmit_after_rounds: int = 2
+
+    def __post_init__(self) -> None:
+        # Fail at construction time (with the registered names) rather than
+        # deep inside receiver setup; also covers dataclasses.replace(...).
+        validate_transport_kind(self.transport.kind)
 
 
 @dataclasses.dataclass
@@ -166,22 +160,14 @@ class FederatedSystem:
         self.history: list[RoundResult] = []
         self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
 
+        # Transport dispatch goes through the registry: FederatedSystem has
+        # no per-protocol branches, so new transports plug in unchanged.
+        self.transport: Transport = make_transport(self.cfg.transport.kind)
+
         # Persistent receivers.
-        t = self.cfg.transport
-        if t.kind == "mudp":
-            self._server_rx = MudpReceiver(
-                sim, self.server_node, nack_timeout_ns=t.timeout_ns,
-                max_nack_retries=t.max_retries,
-                on_deliver=self._on_server_deliver)
-        elif t.kind == "udp":
-            self._server_rx = UdpReceiver(
-                sim, self.server_node, deadline_ns=t.udp_deadline_ns,
-                on_deliver=self._on_server_deliver_partial)
-        elif t.kind == "tcp":
-            self._server_rx = TcpReceiver(
-                sim, self.server_node, on_deliver=self._on_server_deliver)
-        else:
-            raise ValueError(f"unknown transport {t.kind}")
+        self._server_rx = self.transport.create_receiver(
+            sim, self.server_node, self.cfg.transport,
+            self._on_server_delivery)
         self._client_rx: dict[str, object] = {}
         for c in clients:
             self._install_client_rx(c)
@@ -196,22 +182,14 @@ class FederatedSystem:
         self._round_start_ns = 0
         self._deadline_timer = None
         self._failed: list[str] = []
+        self._round_retx = 0
+        self._late_folded = 0
 
     # -- receiver plumbing ---------------------------------------------------
     def _install_client_rx(self, client: FLClient) -> None:
-        t = self.cfg.transport
-        node = self.sim.node(client.addr)
-        cb = self._make_client_deliver(client)
-        if t.kind == "mudp":
-            rx = MudpReceiver(self.sim, node, nack_timeout_ns=t.timeout_ns,
-                              max_nack_retries=t.max_retries, on_deliver=cb)
-        elif t.kind == "udp":
-            rx = UdpReceiver(self.sim, node, deadline_ns=t.udp_deadline_ns,
-                             on_deliver=lambda a, x, p, tot:
-                             cb(a, x, p))  # best effort downlink
-        else:
-            rx = TcpReceiver(self.sim, node, on_deliver=cb)
-        self._client_rx[client.addr] = rx
+        self._client_rx[client.addr] = self.transport.create_receiver(
+            self.sim, self.sim.node(client.addr), self.cfg.transport,
+            self._make_client_deliver(client))
 
     def add_client(self, client: FLClient) -> None:
         """Elastic join (between rounds)."""
@@ -298,11 +276,18 @@ class FederatedSystem:
                           self._uplink_failed(a)).start()
 
     def _make_client_deliver(self, client: FLClient):
-        def _cb(sender_addr: str, txn: int, packets: dict) -> None:
-            if self._round_of_txn(txn) != self._round_idx:
+        def _cb(d: Delivery) -> None:
+            if self._round_of_txn(d.txn) != self._round_idx:
                 return
-            client.params = self.packetizer.from_packets(
-                packets, self.global_params)
+            if d.complete:
+                client.params = self.packetizer.from_packets(
+                    d.packets, self.global_params)
+            else:
+                # Best-effort downlink: the client trains on the zero-filled
+                # model (Delivery.complete makes the gap explicit instead of
+                # silently treating a partial broadcast as the full model).
+                vec = self._decode_vec(d.reassemble())
+                client.params = unflatten_from_vector(vec, self.global_params)
             self._schedule_training(client)
         return _cb
 
@@ -338,41 +323,27 @@ class FederatedSystem:
             on_fail=lambda s, a=client.addr: self._uplink_failed(a)).start()
 
     def _make_sender(self, src, dst, packets, on_fail=None):
-        t = self.cfg.transport
-        if t.kind == "mudp":
-            return MudpSender(self.sim, src, dst, packets,
-                              timeout_ns=t.timeout_ns,
-                              max_retries=t.max_retries,
-                              on_complete=self._note_retx,
-                              on_fail=lambda s: (self._note_retx(s),
-                                                 on_fail and on_fail(s)))
-        if t.kind == "udp":
-            return UdpSender(self.sim, src, dst, packets,
-                             on_complete=self._note_retx)
-        return TcpSender(self.sim, src, dst, packets,
-                         rto_ns=t.timeout_ns,
-                         on_complete=self._note_retx,
-                         on_fail=lambda s: (self._note_retx(s),
-                                            on_fail and on_fail(s)))
-
-    _round_retx = 0
-    _late_folded = 0
+        def _fail(sender) -> None:
+            self._note_retx(sender)
+            if on_fail is not None:
+                on_fail(sender)
+        return self.transport.create_sender(
+            self.sim, src, dst, packets, self.cfg.transport,
+            on_complete=self._note_retx, on_fail=_fail)
 
     def _note_retx(self, sender) -> None:
         self._round_retx += getattr(sender.stats, "retransmissions", 0)
 
     # -- server-side delivery --------------------------------------------------
-    def _on_server_deliver(self, sender_addr: str, txn: int,
-                           packets: dict) -> None:
-        data = pktz.reassemble(packets)
-        self._ingest_update(sender_addr, txn, data)
+    def _on_server_delivery(self, d: Delivery) -> None:
+        if not d.complete and not self.transport.caps.partial_delivery:
+            return  # a reliable transport never hands over a partial payload
+        self._ingest_update(d.sender_addr, d.txn, d.reassemble())
 
-    def _on_server_deliver_partial(self, sender_addr: str, txn: int,
-                                   packets: dict, total: int) -> None:
-        data = reassemble_partial(packets, total)
-        self._ingest_update(sender_addr, txn, data)
-
-    def _ingest_update(self, sender_addr: str, txn: int, data: bytes) -> None:
+    def _decode_vec(self, data: bytes) -> np.ndarray:
+        """Decode a (possibly zero-filled) byte stream to a model-sized
+        vector; undecodable or mis-sized payloads degrade to zeros, the
+        capability-driven path for partial deliveries."""
         n_expected = flatten_to_vector(self.global_params).size
         try:
             vec = self.packetizer.codec.decode(data)
@@ -381,8 +352,10 @@ class FederatedSystem:
         if vec.size < n_expected:
             vec = np.concatenate(
                 [vec, np.zeros(n_expected - vec.size, dtype=np.float32)])
-        vec = vec[:n_expected]
+        return vec[:n_expected]
 
+    def _ingest_update(self, sender_addr: str, txn: int, data: bytes) -> None:
+        vec = self._decode_vec(data)
         upd_round = self._round_of_txn(txn)
         if upd_round != self._round_idx or not self._round_open:
             # Straggler from a previous round: fold next round, discounted.

@@ -72,7 +72,9 @@ class TcpSender:
 
     # -- events ----------------------------------------------------------------
     def _on_packet(self, pkt: Packet) -> bool:
-        if self._done or pkt.txn != self.txn:
+        # (txn, responder) match — see MudpSender._on_packet: concurrent
+        # broadcast senders share a txn on one node.
+        if self._done or pkt.txn != self.txn or pkt.addr != self.dest.addr:
             return False
         if pkt.kind == PacketKind.SYN_ACK and not self._established:
             self._established = True

@@ -1,0 +1,336 @@
+"""The pluggable Transport API: registry, capability flags, the unified
+Delivery contract, and the mudp+fec loss-repair guarantees.
+
+Deliberately hypothesis-free (unlike test_transport_properties.py) so it runs
+in minimal environments; the FEC "property" tests enumerate drop patterns
+exhaustively instead of sampling them.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (BernoulliLoss, Delivery, DropList, FederatedSystem,
+                        FLClient, FLConfig, Link, NoLoss, Simulator, Transport,
+                        TransportCaps, TransportConfig, available_transports,
+                        make_transport, register_transport)
+from repro.core.fec import (FecMudpReceiver, FecMudpSender,
+                            expected_parity_count, parity_groups)
+from repro.core.packetizer import packetize
+from repro.core.transport import _REGISTRY
+
+C, S = "10.0.0.1", "10.0.0.2"
+SERVER = "10.1.2.5"
+
+
+def link_pair(sim, loss=None, rate=1e7, delay=50_000_000):
+    sim.connect(C, S, Link(rate, delay, loss or NoLoss()), Link(rate, delay))
+
+
+def run_transfer(kind, data, loss=None, *, cfg=None, mtu=156):
+    """One transaction C -> S through the public Transport API."""
+    cfg = cfg or TransportConfig(kind=kind, timeout_ns=2_000_000_000,
+                                 udp_deadline_ns=3_000_000_000, fec_block=4)
+    transport = make_transport(kind)
+    sim = Simulator()
+    link_pair(sim, loss)
+    pkts = packetize(data, C, txn=5, mtu=mtu)
+    seen, outcome = [], {}
+    rx = transport.create_receiver(sim, sim.node(S), cfg, seen.append)
+    tx = transport.create_sender(sim, sim.node(C), sim.node(S), pkts, cfg,
+                                 on_complete=lambda s: outcome.update(ok=True),
+                                 on_fail=lambda s: outcome.update(ok=False))
+    tx.start()
+    sim.run()
+    return seen, outcome, tx, rx, len(pkts)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+class TestRegistry:
+    def test_builtins_are_registered(self):
+        names = available_transports()
+        for name in ("mudp", "udp", "tcp", "mudp+fec"):
+            assert name in names
+
+    def test_register_make_roundtrip(self):
+        class NullTransport(Transport):
+            name = "null-test"
+            caps = TransportCaps(reliable=False, supports_fail_cb=False)
+
+            def create_sender(self, sim, src, dst, packets, cfg, *,
+                              on_complete=None, on_fail=None):
+                raise NotImplementedError
+
+            def create_receiver(self, sim, node, cfg, on_deliver):
+                raise NotImplementedError
+
+        try:
+            register_transport("null-test", NullTransport)
+            assert "null-test" in available_transports()
+            made = make_transport("null-test")
+            assert isinstance(made, NullTransport)
+            assert made.caps.reliable is False
+            # registered names are immediately valid config kinds
+            TransportConfig(kind="null-test")
+        finally:
+            _REGISTRY.pop("null-test", None)
+
+    def test_duplicate_name_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_transport("mudp", lambda: None)
+
+    def test_unknown_name_raises_with_listing(self):
+        with pytest.raises(ValueError, match="mudp"):
+            make_transport("quic")
+
+    def test_unknown_kind_fails_at_config_construction(self):
+        with pytest.raises(ValueError, match="registered transports"):
+            TransportConfig(kind="carrier-pigeon")
+
+    def test_unknown_kind_fails_at_flconfig_replace(self):
+        cfg = FLConfig()
+        bad = dataclasses.replace(cfg.transport)
+        bad.kind = "carrier-pigeon"   # post-construction typo
+        with pytest.raises(ValueError, match="registered transports"):
+            dataclasses.replace(cfg, transport=bad)
+
+
+# --------------------------------------------------------------------------
+# The unified Delivery contract, over every registered transport
+# --------------------------------------------------------------------------
+class TestDeliveryContract:
+    @pytest.mark.parametrize("kind", available_transports())
+    def test_lossless_link_same_bytes_out(self, kind):
+        data = bytes(range(256)) * 13  # ~3.3KB -> many packets at mtu=156
+        seen, outcome, tx, rx, total = run_transfer(kind, data)
+        assert outcome.get("ok") is True
+        assert len(seen) == 1, "on_deliver must fire exactly once"
+        d = seen[0]
+        assert isinstance(d, Delivery)
+        assert d.sender_addr == C
+        assert d.txn == 5
+        assert d.total == total
+        assert d.complete is True
+        assert sorted(d.packets) == list(range(1, total + 1))
+        assert d.reassemble() == data
+
+    @pytest.mark.parametrize("kind", available_transports())
+    def test_caps_reliable_transports_survive_loss(self, kind):
+        caps = make_transport(kind).caps
+        data = bytes(range(256)) * 13
+        seen, outcome, *_ = run_transfer(
+            kind, data, loss=BernoulliLoss(p=0.15, seed=7))
+        assert len(seen) == 1
+        d = seen[0]
+        if caps.reliable:
+            assert d.complete and d.reassemble() == data
+        else:
+            assert caps.partial_delivery
+            # whatever arrived is delivered; gaps zero-fill
+            assert len(d.reassemble()) > 0
+
+    def test_partial_delivery_flag_reflects_gaps(self):
+        data = bytes(range(256)) * 13
+        seen, _, _, _, total = run_transfer("udp", data,
+                                            loss=DropList({(2, 0)}))
+        d = seen[0]
+        assert d.complete is False
+        assert d.total == total
+        assert 2 not in d.packets
+        blob = d.reassemble()
+        assert len(blob) == len(data)
+        chunk = len(packetize(data, C, mtu=156)[0].payload)
+        assert blob[chunk:2 * chunk] == b"\x00" * chunk
+
+
+# --------------------------------------------------------------------------
+# mudp+fec: forward repair of isolated losses
+# --------------------------------------------------------------------------
+class TestFecRepair:
+    N_PACKETS = 9          # at mtu=156 with the data below
+    DATA = bytes(range(256)) * 5  # 1280B -> 9 packets of <=128B data + hdr
+
+    def _run(self, drops, fec_block=4, fec_parity=1):
+        cfg = TransportConfig(kind="mudp+fec", timeout_ns=2_000_000_000,
+                              fec_block=fec_block, fec_parity=fec_parity)
+        seen, outcome, tx, rx, total = run_transfer(
+            "mudp+fec", self.DATA, loss=DropList(drops), cfg=cfg)
+        return seen, outcome, tx, rx, total
+
+    def test_single_loss_per_block_repairs_with_zero_nacks(self):
+        # Property, enumerated exhaustively: ANY single dropped data packet
+        # per block is repaired forward => no NACK is ever sent.
+        _, _, _, _, total = self._run(set())
+        for seq in range(1, total + 1):
+            seen, outcome, tx, rx, _ = self._run({(seq, 0)})
+            assert outcome.get("ok") is True, f"seq {seq}"
+            assert seen[0].complete and seen[0].reassemble() == self.DATA
+            assert rx.stats_nacks_sent == 0, \
+                f"seq {seq}: FEC should repair without NACKs"
+            assert rx.stats_repairs == 1
+            assert tx.stats.retransmissions == 0
+
+    def test_one_loss_in_every_block_still_zero_nacks(self):
+        drops = {(1, 0), (6, 0), (9, 0)}  # blocks are 1-4, 5-8, 9
+        seen, outcome, tx, rx, _ = self._run(drops)
+        assert outcome.get("ok") is True
+        assert seen[0].reassemble() == self.DATA
+        assert rx.stats_nacks_sent == 0
+        assert rx.stats_repairs == 3
+
+    def test_double_loss_in_one_group_falls_back_to_nack(self):
+        seen, outcome, tx, rx, _ = self._run({(2, 0), (3, 0)})
+        assert outcome.get("ok") is True
+        assert seen[0].reassemble() == self.DATA
+        assert rx.stats_nacks_sent > 0          # FEC could not cover this
+        assert tx.stats.retransmissions > 0
+
+    def test_interleaved_parity_covers_two_losses_per_block(self):
+        # k=2 parity per block: seqs 2 and 3 land in different XOR groups.
+        seen, outcome, tx, rx, _ = self._run({(2, 0), (3, 0)}, fec_parity=2)
+        assert outcome.get("ok") is True
+        assert seen[0].reassemble() == self.DATA
+        assert rx.stats_nacks_sent == 0
+        assert rx.stats_repairs == 2
+
+    def test_lost_parity_is_harmless(self):
+        # Drop a parity packet (attempt 0 of parity idx 1) AND a data packet
+        # of another block: data still recovers (via NACK for its own block
+        # if needed), and the transfer completes.
+        class DropParity:
+            def __init__(self):
+                self.dropped = False
+
+            def drops(self, pkt):
+                from repro.core.packets import PacketKind
+                if (pkt.kind == PacketKind.PARITY and pkt.seq == 1
+                        and not self.dropped):
+                    self.dropped = True
+                    return True
+                return False
+
+        cfg = TransportConfig(kind="mudp+fec", timeout_ns=1_000_000_000,
+                              fec_block=4)
+        seen, outcome, tx, rx, total = run_transfer(
+            "mudp+fec", self.DATA, loss=DropParity(), cfg=cfg)
+        assert outcome.get("ok") is True
+        assert seen[0].reassemble() == self.DATA
+
+    def test_parity_overhead_is_bounded(self):
+        _, _, tx, _, total = self._run(set())
+        assert tx.stats.parity_sent == expected_parity_count(total, 4, 1)
+        assert tx.stats.data_sent == total
+
+    def test_parity_groups_partition_the_block(self):
+        for total in (1, 3, 8, 17):
+            for block in (1, 4, 8):
+                for k in (1, 2, 3):
+                    groups = parity_groups(total, block, k)
+                    covered = sorted(s for g in groups for s in g)
+                    assert covered == list(range(1, total + 1))
+
+
+# --------------------------------------------------------------------------
+# FL integration through the registry
+# --------------------------------------------------------------------------
+def _const_train(value):
+    def fn(params, round_idx, client):
+        return ({k: np.full_like(v, value) for k, v in params.items()}, {})
+    return fn
+
+
+def _build_system(kind, loss_models=None, mtu=1500, **cfg_kw):
+    sim = Simulator()
+    clients = []
+    for i, value in enumerate((1.0, 3.0)):
+        addr = f"10.1.2.{10 + i}"
+        lm = (loss_models or {}).get(addr, NoLoss())
+        sim.connect(addr, SERVER, Link(1e8, 1_000_000, lm),
+                    Link(1e8, 1_000_000))
+        clients.append(FLClient(addr, _const_train(value),
+                                train_time_ns=1_000_000))
+    params = {"w": np.zeros((300,), np.float32)}
+    cfg = FLConfig(aggregation="fedavg",
+                   transport=TransportConfig(kind=kind, mtu=mtu,
+                                             timeout_ns=1_000_000_000,
+                                             udp_deadline_ns=2_000_000_000,
+                                             **cfg_kw))
+    return FederatedSystem(sim, SERVER, clients, params, cfg), sim
+
+
+class TestFlThroughRegistry:
+    @pytest.mark.parametrize("kind", available_transports())
+    def test_lossless_round_agrees_across_transports(self, kind):
+        system, _ = _build_system(kind)
+        res = system.run_round()
+        assert len(res.arrived) == 2
+        np.testing.assert_allclose(system.global_params["w"], 2.0, atol=1e-6)
+
+    def test_fec_round_survives_loss_with_fewer_retx_than_mudp(self):
+        losses = lambda: {"10.1.2.10": BernoulliLoss(p=0.1, seed=3),
+                          "10.1.2.11": BernoulliLoss(p=0.1, seed=4)}
+        fec, _ = _build_system("mudp+fec", loss_models=losses(), mtu=200)
+        plain, _ = _build_system("mudp", loss_models=losses(), mtu=200)
+        rf = fec.run_round()
+        rp = plain.run_round()
+        assert sorted(rf.arrived) == sorted(rp.arrived)
+        np.testing.assert_allclose(fec.global_params["w"],
+                                   plain.global_params["w"], atol=1e-6)
+        assert rf.retransmissions < rp.retransmissions
+
+    @pytest.mark.parametrize("kind", ["mudp", "mudp+fec", "tcp"])
+    def test_broadcast_ack_crosstalk_does_not_lose_a_client(self, kind):
+        # Server broadcast runs one sender per client under the SAME txn on
+        # the server node: client B's ACK must not complete (or steer) client
+        # A's transaction while A is still recovering a dropped packet.
+        sim = Simulator()
+        clients = []
+        for i, value in enumerate((1.0, 3.0)):
+            addr = f"10.1.2.{10 + i}"
+            # Client A: lossy AND slower downlink, so B's ACK reaches the
+            # server before A's NACK — the exact interleaving where a
+            # txn-only match lets B's ACK falsely complete A's sender.
+            down_loss = DropList({(2, 0)}) if i == 0 else NoLoss()
+            delay = 5_000_000 if i == 0 else 1_000_000
+            sim.connect(addr, SERVER, Link(1e8, delay),
+                        Link(1e8, delay, down_loss))
+            clients.append(FLClient(addr, _const_train(value),
+                                    train_time_ns=1_000_000))
+        params = {"w": np.zeros((300,), np.float32)}
+        cfg = FLConfig(aggregation="fedavg",
+                       transport=TransportConfig(kind=kind, mtu=428,
+                                                 timeout_ns=1_000_000_000))
+        system = FederatedSystem(sim, SERVER, clients, params, cfg)
+        res = system.run_round()
+        assert sorted(res.arrived) == ["10.1.2.10", "10.1.2.11"]
+        np.testing.assert_allclose(system.global_params["w"], 2.0, atol=1e-6)
+
+    def test_partial_downlink_is_not_treated_as_full_model(self):
+        # Drop one downlink broadcast packet: the udp client must train on a
+        # zero-filled model (Delivery.complete=False path), not crash or
+        # silently use stale params.
+        sim = Simulator()
+        addr = "10.1.2.10"
+        sim.connect(addr, SERVER, Link(1e8, 1_000_000, NoLoss()),
+                    Link(1e8, 1_000_000, DropList({(2, 0)})))
+        received = {}
+
+        def spy_train(params, round_idx, client):
+            received["params"] = params
+            return params, {}
+
+        params = {"w": np.ones((300,), np.float32)}
+        cfg = FLConfig(aggregation="fedavg",
+                       transport=TransportConfig(kind="udp", mtu=428,
+                                                 udp_deadline_ns=10 ** 9))
+        client = FLClient(addr, spy_train, train_time_ns=1_000_000)
+        system = FederatedSystem(sim, SERVER, [client], params, cfg)
+        res = system.run_round()
+        assert "params" in received, "client must still train"
+        w = received["params"]["w"]
+        assert (w == 0.0).any(), "gap must surface as zeros"
+        assert (w == 1.0).any(), "delivered chunks must survive"
+        assert res.arrived == [addr]
