@@ -1,0 +1,214 @@
+"""Benchmark 3 — fleet-scale FL: heterogeneous cohorts, partial
+participation, straggler-aware rounds, for every registered transport.
+
+For each fleet size and each transport in ``available_transports()`` the
+same seeded :class:`FleetConfig` (identical cohorts, link draws, and
+per-round client samples — the transport is the only variable) runs
+``--rounds`` FL rounds of the synthetic consensus objective and reports:
+simulated round time, rounds/sec (simulated and wall), bytes on wire,
+retransmissions, arrivals vs roster (stragglers cut at the deadline), and
+rounds-to-target-loss.  Results land in ``--out`` (default
+``BENCH_fleet.json``); everything outside the top-level ``"wall"`` key is
+bit-for-bit reproducible for a fixed seed (``--replay-check`` proves it by
+running the whole matrix twice).
+
+The process exits non-zero if any requested transport is missing from the
+results — CI uses this so no transport is ever silently skipped.
+
+  PYTHONPATH=src python benchmarks/fleet_scale.py --clients 100 --rounds 2
+  PYTHONPATH=src python benchmarks/fleet_scale.py --clients 64 --rounds 1 \\
+      --replay-check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import (ConsensusObjective, FLConfig, FleetConfig,
+                        TransportConfig, available_transports, build_fleet,
+                        cohort_counts, profiles_digest)
+
+NS_PER_SEC = 1_000_000_000
+
+
+def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
+              participation: float, deadline_ns: int, n_params: int) -> dict:
+    """One (transport, fleet size) cell. Returns a JSON-ready dict whose
+    every field derives from the simulation — no wall-clock anywhere."""
+    fleet = FleetConfig(n_clients=n_clients, seed=seed,
+                        participation_fraction=participation,
+                        round_deadline_ns=deadline_ns)
+    objective = ConsensusObjective(n_clients, n_params, seed=seed)
+    fl_cfg = FLConfig(
+        aggregation="fedavg",
+        transport=TransportConfig(kind=transport,
+                                  timeout_ns=2 * NS_PER_SEC,
+                                  udp_deadline_ns=3 * NS_PER_SEC))
+    sim, system, profiles = build_fleet(fleet, objective.init_params(),
+                                        objective.train_fn, fl_cfg)
+    loss0 = objective.loss(system.global_params)
+    round_rows, losses = [], []
+    for _ in range(rounds):
+        r = system.run_round()
+        loss = objective.loss(system.global_params)
+        losses.append(loss)
+        round_rows.append({
+            "round": r.round_idx,
+            "duration_ns": r.duration_ns,
+            "roster": len(r.roster),
+            "arrived": len(r.arrived),
+            "failed": len(r.failed),
+            "late_folded": r.late_folded,
+            "bytes_sent": r.bytes_sent,
+            "packets_sent": r.packets_sent,
+            "packets_dropped": r.packets_dropped,
+            "retransmissions": r.retransmissions,
+            "loss": loss,
+        })
+    sim_ns = sum(r["duration_ns"] for r in round_rows)
+    return {
+        "cohorts": cohort_counts(profiles),
+        "profiles_digest": profiles_digest(profiles),
+        "rounds": round_rows,
+        "sim_time_ns": sim_ns,
+        "rounds_per_sim_sec": (rounds * NS_PER_SEC / sim_ns) if sim_ns else None,
+        "bytes_on_wire": sum(r["bytes_sent"] for r in round_rows),
+        "retransmissions": sum(r["retransmissions"] for r in round_rows),
+        "initial_loss": loss0,
+        "final_loss": losses[-1] if losses else loss0,
+        "rounds_to_target_loss": next(
+            (i + 1 for i, l in enumerate(losses) if l <= 0.1 * loss0), None),
+    }
+
+
+def run_matrix(args, transports: list[str]) -> tuple[dict, dict, dict]:
+    """(deterministic results, wall-clock section, errors)."""
+    fleets: dict = {}
+    wall: dict = {}
+    errors: dict = {}
+    for n_clients in args.clients:
+        fleets[str(n_clients)] = {"transports": {}}
+        wall[str(n_clients)] = {}
+        for tr in transports:
+            t0 = time.perf_counter()
+            try:
+                cell = run_fleet(
+                    tr, n_clients=n_clients, rounds=args.rounds,
+                    seed=args.seed, participation=args.participation,
+                    deadline_ns=int(args.deadline_s * NS_PER_SEC),
+                    n_params=args.params)
+            except Exception as e:  # noqa: BLE001 - a cell failure is a row
+                errors[f"{n_clients}/{tr}"] = f"{type(e).__name__}: {e}"
+                continue
+            wall_s = time.perf_counter() - t0
+            fleets[str(n_clients)]["transports"][tr] = cell
+            wall[str(n_clients)][tr] = {
+                "wall_s": wall_s,
+                "rounds_per_wall_sec": args.rounds / wall_s if wall_s else None,
+            }
+            print(f"fleet_scale/{tr}_c{n_clients},{wall_s * 1e6:.1f},"
+                  f"sim_s={cell['sim_time_ns'] / 1e9:.2f}"
+                  f";bytes={cell['bytes_on_wire']}"
+                  f";retx={cell['retransmissions']}"
+                  f";arrived={sum(r['arrived'] for r in cell['rounds'])}"
+                  f"/{sum(r['roster'] for r in cell['rounds'])}"
+                  f";loss={cell['final_loss']:.4f}"
+                  f";rtt_loss={cell['rounds_to_target_loss']}", flush=True)
+    return fleets, wall, errors
+
+
+def bench(rounds: int = 1):
+    """benchmarks.run harness entry: a small fleet across all transports."""
+    rows = []
+    for tr in available_transports():
+        t0 = time.perf_counter()
+        cell = run_fleet(tr, n_clients=16, rounds=rounds, seed=0,
+                         participation=0.75, deadline_ns=20 * NS_PER_SEC,
+                         n_params=1024)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fleet_scale/{tr}_c16", wall_us,
+                     f"sim_s={cell['sim_time_ns'] / 1e9:.2f}"
+                     f";bytes={cell['bytes_on_wire']}"
+                     f";retx={cell['retransmissions']}"
+                     f";loss={cell['final_loss']:.4f}"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", default="100",
+                    help="comma-separated fleet sizes (default 100)")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--participation", type=float, default=0.6,
+                    help="per-round client sampling fraction")
+    ap.add_argument("--deadline-s", type=float, default=10.0,
+                    help="server round deadline in simulated seconds "
+                         "(straggler cutoff)")
+    ap.add_argument("--params", type=int, default=2048,
+                    help="model size in float32 parameters")
+    ap.add_argument("--transports", default=None,
+                    help="comma-separated subset (default: every "
+                         "registered transport)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--replay-check", action="store_true",
+                    help="run the matrix twice and fail unless the "
+                         "deterministic results are bit-identical")
+    args = ap.parse_args()
+    args.clients = [int(c) for c in str(args.clients).split(",") if c]
+    if args.rounds < 1 or not args.clients:
+        ap.error("--rounds and --clients must be >= 1")
+
+    requested = (args.transports.split(",") if args.transports
+                 else available_transports())
+    for tr in requested:
+        if tr not in available_transports():
+            ap.error(f"unknown transport {tr!r}; registered: "
+                     f"{available_transports()}")
+
+    fleets, wall, errors = run_matrix(args, requested)
+    report = {
+        "meta": {
+            "clients": args.clients,
+            "rounds": args.rounds,
+            "seed": args.seed,
+            "participation": args.participation,
+            "deadline_s": args.deadline_s,
+            "params": args.params,
+            "transports": requested,
+        },
+        "fleets": fleets,
+        "errors": errors,
+        "wall": wall,
+    }
+
+    if args.replay_check:
+        fleets2, _, errors2 = run_matrix(args, requested)
+        if (fleets2, errors2) != (fleets, errors):
+            print("REPLAY CHECK FAILED: results differ between two runs "
+                  "with the same seed", file=sys.stderr)
+            return 2
+        print("replay-check: bit-identical across two runs", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}", flush=True)
+
+    # No transport may be silently skipped: every requested transport must
+    # have produced a result cell for every fleet size.
+    missing = [f"{n}/{tr}" for n in fleets for tr in requested
+               if tr not in fleets[n]["transports"]]
+    if missing or errors:
+        for key in missing:
+            print(f"MISSING RESULT: {key}", file=sys.stderr)
+        for key, err in errors.items():
+            print(f"TRANSPORT ERROR: {key}: {err}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

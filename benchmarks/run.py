@@ -11,12 +11,14 @@ import argparse
 import sys
 import time
 
-from benchmarks import (aggregation, codecs, fl_convergence, kernels_bench,
-                        roofline, transport_comparison, transport_scenarios)
+from benchmarks import (aggregation, codecs, fl_convergence, fleet_scale,
+                        kernels_bench, roofline, transport_comparison,
+                        transport_scenarios)
 
 SUITES = {
     "transport_scenarios": transport_scenarios,
     "transport_comparison": transport_comparison,
+    "fleet_scale": fleet_scale,
     "fl_convergence": fl_convergence,
     "codecs": codecs,
     "aggregation": aggregation,

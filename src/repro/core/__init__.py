@@ -17,6 +17,10 @@ from repro.core.compression import (Codec, HexCodec, Int8Codec, RawCodec,
                                     TopKCodec, make_codec)
 from repro.core.fec import (FecMudpReceiver, FecMudpSender, FecMudpTransport,
                             parity_groups)
+from repro.core.fleet import (COHORT_PRESETS, ClientProfile, CohortSpec,
+                              ConsensusObjective, FleetConfig, build_fleet,
+                              cohort_counts, links_for, profiles_digest,
+                              sample_profiles)
 from repro.core.mudp import MudpReceiver, MudpSender, TxnStats
 from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
                                    reassemble, unflatten_from_vector)
@@ -38,6 +42,9 @@ __all__ = [
     "DCN_LINK", "PAPER_LINK", "WAN_LINK",
     "Codec", "HexCodec", "Int8Codec", "RawCodec", "TopKCodec", "make_codec",
     "FecMudpReceiver", "FecMudpSender", "FecMudpTransport", "parity_groups",
+    "COHORT_PRESETS", "ClientProfile", "CohortSpec", "ConsensusObjective",
+    "FleetConfig", "build_fleet", "cohort_counts", "links_for",
+    "profiles_digest", "sample_profiles",
     "MudpReceiver", "MudpSender", "TxnStats",
     "Packetizer", "flatten_to_vector", "packetize", "reassemble",
     "unflatten_from_vector",

@@ -110,21 +110,44 @@ class GilbertElliott(LossModel):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class Link:
-    """Point-to-point link: serialization at ``data_rate_bps`` plus fixed
-    ``delay_ns`` propagation, with an attached loss model.
+    """Point-to-point link: serialization at ``data_rate_bps`` plus
+    ``delay_ns`` propagation (optionally jittered), with an attached loss
+    model.
 
     Serialization occupies the link (FIFO): back-to-back sends queue behind
     each other, matching NS3 PointToPointNetDevice semantics.
+
+    ``jitter_ns`` adds a per-packet propagation jitter drawn uniformly from
+    ``[0, jitter_ns)``, keyed deterministically by (jitter_seed, txn, kind,
+    seq, attempt) — the same replay-stable idiom as :class:`BernoulliLoss`,
+    so a fleet of hundreds of jittered links still replays bit-for-bit.
+    Jitter can reorder packets in flight, which is exactly the wide-area
+    behaviour the MUDP gap machinery has to absorb.
     """
 
     data_rate_bps: float = 5_000_000.0       # paper: 5 Mbps
     delay_ns: int = 2_000_000_000            # paper: 2000 ms
     loss: LossModel = dataclasses.field(default_factory=NoLoss)
+    jitter_ns: int = 0                       # uniform extra delay in [0, jitter_ns)
+    jitter_seed: int = 0
     # Busy-until bookkeeping (owned by the simulator).
     _busy_until_ns: int = 0
 
     def serialization_ns(self, size_bytes: int) -> int:
         return int(round(size_bytes * 8 * NS_PER_SEC / self.data_rate_bps))
+
+    def propagation_ns(self, pkt: Optional[Packet] = None) -> int:
+        """Propagation delay for one transmission of ``pkt``."""
+        if self.jitter_ns <= 0 or pkt is None:
+            return self.delay_ns
+        # The 0x117E2 tag keeps this stream decorrelated from the loss
+        # models' draws, which hash the same (seed, txn, kind, seq, attempt)
+        # shape — without it, equal seeds would make drop and jitter draws
+        # the same number, biasing delivered-packet jitter upward.
+        key = (0x117E2, self.jitter_seed, pkt.txn, int(pkt.kind), pkt.seq,
+               pkt.attempt)
+        return self.delay_ns + int(
+            random.Random(hash(key)).random() * self.jitter_ns)
 
     def reset(self) -> None:
         self._busy_until_ns = 0

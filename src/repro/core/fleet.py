@@ -1,0 +1,326 @@
+"""Fleet-scale FL simulation: heterogeneous cohorts of hundreds of clients.
+
+The paper validates MUDP on a 3-node star (2 clients, 1 server) and defers
+"a larger Federated learning system" to future work.  This module is that
+step: it turns the paper topology into a *scenario engine* —
+
+* :class:`CohortSpec` — a named band of link/compute characteristics
+  (``fiber`` / ``lte`` / ``congested-edge`` presets in
+  :data:`COHORT_PRESETS`); every per-client quantity is a ``(lo, hi)``
+  range.
+* :class:`ClientProfile` — one client's concrete draw from its cohort:
+  uplink/downlink rate, propagation delay, jitter, loss rate (Bernoulli or
+  bursty Gilbert-Elliott), local train time, and aggregation weight.
+* :func:`sample_profiles` — the seeded sampler.  It consumes only
+  ``random.Random.random()`` (the one generator method with a documented
+  cross-version stability guarantee) keyed by integers, so the same
+  :class:`FleetConfig` produces **bit-identical** cohorts on every machine
+  and Python version.
+* :func:`build_fleet` — wires the profiles into a :class:`Simulator` star,
+  one asymmetric jittered lossy :class:`Link` pair per client, and returns
+  a ready :class:`FederatedSystem` dispatching through whatever transport
+  the :class:`FLConfig` names.
+* :class:`ConsensusObjective` — a synthetic quadratic objective (each
+  client pulls the model toward a private target) whose global loss is
+  analytically computable, giving benchmarks a deterministic
+  rounds-to-target-loss metric without touching real data.
+
+Partial participation and straggler cutoffs are *not* implemented here —
+they are first-class in ``repro.core.rounds`` (``participation_fraction``,
+``round_deadline_ns``); :class:`FleetConfig` simply carries the knobs.
+See ``docs/SCENARIOS.md`` for the full semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.channel import BernoulliLoss, GilbertElliott, Link, LossModel
+from repro.core.rounds import FederatedSystem, FLClient, FLConfig
+from repro.core.simulator import Simulator
+
+NS_PER_SEC = 1_000_000_000
+
+Range = tuple[float, float]
+
+
+# --------------------------------------------------------------------------
+# Cohorts
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CohortSpec:
+    """A named band of client characteristics; every field is drawn
+    per-client, uniformly over its ``(lo, hi)`` range."""
+
+    name: str
+    up_rate_bps: Range              # uplink data rate
+    down_up_ratio: float = 1.0      # downlink rate = uplink * ratio
+    delay_ns: Range = (1_000_000, 5_000_000)
+    jitter_frac: float = 0.0        # jitter_ns = jitter_frac * drawn delay
+    loss_p: Range = (0.0, 0.0)
+    bursty: bool = False            # Gilbert-Elliott instead of Bernoulli
+    train_time_ns: Range = (500_000_000, 1_000_000_000)
+    weight: Range = (0.5, 2.0)      # |D_k| proxy for weighted FedAvg
+
+
+#: The presets the CI scenario matrix exercises. ``fiber`` is the
+#: datacenter-adjacent best case, ``lte`` the PeerFL-style mobile mid-band,
+#: ``congested-edge`` the FedComm-style constrained edge where protocol
+#: rankings flip (slow, jittery, bursty loss -> stragglers and cutoffs).
+COHORT_PRESETS: dict[str, CohortSpec] = {
+    "fiber": CohortSpec(
+        name="fiber",
+        up_rate_bps=(200e6, 1000e6),
+        down_up_ratio=1.0,
+        delay_ns=(1_000_000, 5_000_000),          # 1-5 ms
+        jitter_frac=0.1,
+        loss_p=(0.0, 0.001),
+        bursty=False,
+        train_time_ns=(200_000_000, 500_000_000),  # 0.2-0.5 s
+    ),
+    "lte": CohortSpec(
+        name="lte",
+        up_rate_bps=(5e6, 50e6),
+        down_up_ratio=4.0,                         # asymmetric cellular
+        delay_ns=(20_000_000, 60_000_000),         # 20-60 ms
+        jitter_frac=0.5,
+        loss_p=(0.005, 0.03),
+        bursty=False,
+        train_time_ns=(500_000_000, 2_000_000_000),
+    ),
+    "congested-edge": CohortSpec(
+        name="congested-edge",
+        up_rate_bps=(0.5e6, 4e6),
+        down_up_ratio=2.0,
+        delay_ns=(50_000_000, 200_000_000),        # 50-200 ms
+        jitter_frac=1.0,
+        loss_p=(0.05, 0.15),
+        bursty=True,
+        train_time_ns=(1_000_000_000, 5_000_000_000),
+    ),
+}
+
+#: Default cohort mix (fractions are normalized; PeerFL-style majority
+#: mobile with a constrained tail).
+DEFAULT_MIX: tuple[tuple[str, float], ...] = (
+    ("fiber", 0.3), ("lte", 0.5), ("congested-edge", 0.2))
+
+
+# --------------------------------------------------------------------------
+# Profiles
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ClientProfile:
+    """One client's concrete draw from its cohort."""
+
+    addr: str
+    cohort: str
+    up_rate_bps: float
+    down_rate_bps: float
+    delay_ns: int
+    jitter_ns: int
+    loss_p: float
+    bursty: bool
+    train_time_ns: int
+    weight: float
+    seed: int                       # base seed for this client's link RNGs
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Declarative description of a heterogeneous fleet + round policy."""
+
+    n_clients: int = 100
+    cohort_mix: tuple[tuple[str, float], ...] = DEFAULT_MIX
+    cohorts: Optional[dict[str, CohortSpec]] = None   # default COHORT_PRESETS
+    seed: int = 0
+    server_addr: str = "10.0.0.1"
+    # Round policy, forwarded into FLConfig by build_fleet().
+    participation_fraction: float = 1.0
+    min_participants: int = 1
+    round_deadline_ns: Optional[int] = None
+
+    def cohort_specs(self) -> dict[str, CohortSpec]:
+        return self.cohorts if self.cohorts is not None else COHORT_PRESETS
+
+
+def _client_addr(i: int) -> str:
+    # 16-byte address budget (packets.py): "10.1.<hi>.<lo>" stays within it
+    # for fleets up to 250 * 250 clients.
+    return f"10.1.{i // 250}.{i % 250 + 1}"
+
+
+def sample_profiles(cfg: FleetConfig) -> list[ClientProfile]:
+    """Deterministically draw ``cfg.n_clients`` profiles from the mix.
+
+    Only ``Random.random()`` is consumed, in a fixed order, keyed by
+    integers — bit-identical across runs, platforms, and Python versions.
+    """
+    specs = cfg.cohort_specs()
+    mix = list(cfg.cohort_mix)
+    if not mix:
+        raise ValueError("empty cohort_mix")
+    for name, _ in mix:
+        if name not in specs:
+            raise ValueError(f"unknown cohort {name!r}; available: "
+                             f"{sorted(specs)}")
+    total_w = sum(max(0.0, w) for _, w in mix)
+    if total_w <= 0:
+        raise ValueError("cohort_mix weights must sum to > 0")
+    cum, acc = [], 0.0
+    for name, w in mix:
+        acc += max(0.0, w) / total_w
+        cum.append((name, acc))
+
+    rng = random.Random(hash((int(cfg.seed), 0xF1EE7)))
+
+    def u(lo: float, hi: float) -> float:
+        return lo + (hi - lo) * rng.random()
+
+    profiles: list[ClientProfile] = []
+    for i in range(cfg.n_clients):
+        r = rng.random()
+        cohort = cum[-1][0]   # fallback guards float round-off on the last edge
+        for name, edge in cum:
+            if r < edge:
+                cohort = name
+                break
+        spec = specs[cohort]
+        up = u(*spec.up_rate_bps)
+        delay = int(u(*spec.delay_ns))
+        profiles.append(ClientProfile(
+            addr=_client_addr(i),
+            cohort=cohort,
+            up_rate_bps=up,
+            down_rate_bps=up * spec.down_up_ratio,
+            delay_ns=delay,
+            jitter_ns=int(spec.jitter_frac * delay),
+            loss_p=u(*spec.loss_p),
+            bursty=spec.bursty,
+            train_time_ns=int(u(*spec.train_time_ns)),
+            weight=u(*spec.weight),
+            # Distinct per-client base seed; link RNGs offset from it.
+            seed=int(cfg.seed) * 1_000_003 + i * 4,
+        ))
+    return profiles
+
+
+def profiles_digest(profiles: list[ClientProfile]) -> str:
+    """Stable content hash of a cohort draw (replay checks, CI artifacts)."""
+    h = hashlib.sha256()
+    for p in profiles:
+        h.update(repr(dataclasses.astuple(p)).encode())
+    return h.hexdigest()
+
+
+def _loss_model(p: ClientProfile, seed: int) -> LossModel:
+    if p.bursty:
+        # Bad-state loss an order of magnitude above the mean keeps the
+        # drawn loss_p as the approximate stationary drop rate.
+        return GilbertElliott(p_good_loss=p.loss_p / 4,
+                              p_bad_loss=min(1.0, p.loss_p * 10),
+                              p_bad=0.075, seed=seed)
+    return BernoulliLoss(p=p.loss_p, seed=seed)
+
+
+def links_for(p: ClientProfile) -> tuple[Link, Link]:
+    """(uplink, downlink) for one profile, each with its own seeded loss
+    and jitter streams."""
+    up = Link(p.up_rate_bps, p.delay_ns, _loss_model(p, p.seed),
+              jitter_ns=p.jitter_ns, jitter_seed=p.seed + 2)
+    down = Link(p.down_rate_bps, p.delay_ns, _loss_model(p, p.seed + 1),
+                jitter_ns=p.jitter_ns, jitter_seed=p.seed + 3)
+    return up, down
+
+
+TrainFnFactory = Callable[[int, ClientProfile], Callable]
+
+
+def build_fleet(fleet: FleetConfig, global_params: Any,
+                train_fn_factory: TrainFnFactory,
+                fl_cfg: Optional[FLConfig] = None,
+                ) -> tuple[Simulator, FederatedSystem, list[ClientProfile]]:
+    """Construct the star topology and a ready-to-run FederatedSystem.
+
+    ``train_fn_factory(i, profile)`` returns the i-th client's train_fn.
+    ``fl_cfg`` carries transport/aggregation choices; the fleet's round
+    policy (participation, deadline) overrides the corresponding FLConfig
+    fields so one FleetConfig means one scenario regardless of transport.
+    """
+    profiles = sample_profiles(fleet)
+    fl_cfg = dataclasses.replace(
+        fl_cfg if fl_cfg is not None else FLConfig(),
+        participation_fraction=fleet.participation_fraction,
+        min_participants=fleet.min_participants,
+        participation_seed=fleet.seed,
+        round_deadline_ns=fleet.round_deadline_ns,
+    )
+    sim = Simulator()
+    clients = []
+    for i, p in enumerate(profiles):
+        up, down = links_for(p)
+        sim.connect(p.addr, fleet.server_addr, up, down)
+        clients.append(FLClient(p.addr, train_fn_factory(i, p),
+                                train_time_ns=p.train_time_ns,
+                                weight=p.weight))
+    system = FederatedSystem(sim, fleet.server_addr, clients, global_params,
+                             fl_cfg)
+    return sim, system, profiles
+
+
+def cohort_counts(profiles: list[ClientProfile]) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for p in profiles:
+        out[p.cohort] = out.get(p.cohort, 0) + 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# Synthetic objective: deterministic rounds-to-target-loss
+# --------------------------------------------------------------------------
+class ConsensusObjective:
+    """Quadratic consensus task: client ``k`` holds a private target
+    ``c_k = c + heterogeneity * e_k`` (shared signal + client-specific
+    noise) and local training moves the received model toward it,
+    ``w' = w + lr * (c_k - w)``.  The reported loss is the distance to the
+    consensus optimum ``w* = mean_k c_k``,
+
+        L(w) = ||w - w*||^2 / n_params,
+
+    which FedAvg under full reliable participation contracts geometrically
+    (factor ``1 - lr`` per round, plus a small sampling-noise floor under
+    partial participation), so "rounds to reach ``frac * L(w_0)``" is an
+    analytically grounded convergence metric that lossy transports
+    (zero-filled UDP gaps) and straggler cutoffs visibly hurt.
+    """
+
+    def __init__(self, n_clients: int, n_params: int, *, seed: int = 0,
+                 lr: float = 0.5, heterogeneity: float = 0.1):
+        rng = np.random.default_rng(seed)
+        common = rng.standard_normal((1, n_params))
+        noise = rng.standard_normal((n_clients, n_params))
+        self.targets = (common + heterogeneity * noise).astype(np.float32)
+        self.optimum = self.targets.mean(axis=0)
+        self.lr = float(lr)
+
+    def init_params(self) -> dict[str, np.ndarray]:
+        return {"w": np.zeros((self.targets.shape[1],), np.float32)}
+
+    def train_fn(self, i: int, profile: Optional[ClientProfile] = None
+                 ) -> Callable:
+        target = self.targets[i]
+
+        def fn(params, round_idx, client):
+            w = np.asarray(params["w"], np.float32)
+            new = {"w": w + self.lr * (target - w)}
+            return new, {"local_gap": float(np.mean((w - target) ** 2))}
+        return fn
+
+    def loss(self, params) -> float:
+        w = np.asarray(params["w"], np.float32)
+        return float(np.mean((w - self.optimum) ** 2))

@@ -21,6 +21,7 @@ Beyond the paper (required at thousand-node scale):
 from __future__ import annotations
 
 import dataclasses
+import random
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -51,6 +52,14 @@ class FLConfig:
     staleness_discount: float = 0.5      # late update weight *= discount^age
     unhealthy_after_failures: int = 2
     readmit_after_rounds: int = 2
+    # Partial participation (fleet-scale): each round samples
+    # round(participation_fraction * |active|) clients, at least
+    # min_participants, via a seeded Fisher-Yates draw keyed by
+    # (participation_seed, round_idx) — deterministic across Python versions
+    # because it only consumes Random.random().
+    participation_fraction: float = 1.0
+    min_participants: int = 1
+    participation_seed: int = 0
 
     def __post_init__(self) -> None:
         # Fail at construction time (with the registered names) rather than
@@ -71,6 +80,7 @@ class RoundResult:
     packets_dropped: int
     retransmissions: int
     metrics: dict = dataclasses.field(default_factory=dict)
+    roster: list[str] = dataclasses.field(default_factory=list)
 
 
 # --------------------------------------------------------------------------
@@ -217,7 +227,7 @@ class FederatedSystem:
         self._round_idx = (self._round_idx + 1 if round_idx is None
                            else round_idx)
         r = self._round_idx
-        roster = self.pool.active(r)
+        roster = self._sample_participants(self.pool.active(r), r)
         self._roster = {c.addr: c for c in roster}
         self._resolved = set()
         self._updates = {}
@@ -257,6 +267,7 @@ class FederatedSystem:
             packets_dropped=(stats1["packets_dropped"]
                              - stats0["packets_dropped"]),
             retransmissions=self._round_retx,
+            roster=sorted(self._roster),
         )
         self.history.append(result)
         if self.on_round_end is not None:
@@ -265,6 +276,24 @@ class FederatedSystem:
 
     def run_rounds(self, n: int) -> list[RoundResult]:
         return [self.run_round() for _ in range(n)]
+
+    # -- per-round client sampling (partial participation) -------------------
+    def _sample_participants(self, active: list[FLClient],
+                             round_idx: int) -> list[FLClient]:
+        f = self.cfg.participation_fraction
+        if f >= 1.0 or len(active) <= 1:
+            return list(active)
+        k = max(self.cfg.min_participants, int(round(f * len(active))))
+        k = min(k, len(active))
+        # Partial Fisher-Yates over indices, driven only by Random.random()
+        # (the one generator method with a cross-version stability guarantee),
+        # keyed by integers so PYTHONHASHSEED cannot perturb the draw.
+        rng = random.Random(hash((self.cfg.participation_seed, round_idx)))
+        idx = list(range(len(active)))
+        for j in range(k):
+            pick = j + int(rng.random() * (len(idx) - j))
+            idx[j], idx[pick] = idx[pick], idx[j]
+        return [active[i] for i in sorted(idx[:k])]
 
     # -- downlink: server -> client -------------------------------------------
     def _broadcast_to(self, client: FLClient) -> None:

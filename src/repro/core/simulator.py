@@ -129,7 +129,7 @@ class Simulator:
         start = max(self.now_ns, link._busy_until_ns)
         ser = link.serialization_ns(pkt.size_bytes)
         link._busy_until_ns = start + ser
-        arrival = start + ser + link.delay_ns
+        arrival = start + ser + link.propagation_ns(pkt)
         if link.loss.drops(pkt):
             self.stats["packets_dropped"] += 1
             self.log(f"t={self.now_ns}ns DROP  {src.addr}->{dst.addr} {pkt}")

@@ -1,0 +1,219 @@
+"""Fleet-scale simulation tests: seeded determinism, partial participation,
+and straggler-aware aggregation (hand-computed weighted FedAvg)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (COHORT_PRESETS, ConsensusObjective, FLClient,
+                        FLConfig, FleetConfig, Link, TransportConfig,
+                        available_transports, build_fleet, cohort_counts,
+                        links_for, profiles_digest, sample_profiles)
+from repro.core.channel import NoLoss
+from repro.core.packets import make_data_packet
+from repro.core.rounds import FederatedSystem
+from repro.core.simulator import Simulator
+
+NS = 1_000_000_000
+SERVER = "10.1.2.5"
+
+
+# --------------------------------------------------------------------------
+# Cohort / profile determinism
+# --------------------------------------------------------------------------
+class TestProfileDeterminism:
+    def test_same_seed_bit_identical_profiles(self):
+        cfg = FleetConfig(n_clients=64, seed=123)
+        a, b = sample_profiles(cfg), sample_profiles(cfg)
+        assert a == b                      # frozen dataclasses: exact equality
+        assert profiles_digest(a) == profiles_digest(b)
+
+    def test_different_seed_differs(self):
+        a = sample_profiles(FleetConfig(n_clients=64, seed=1))
+        b = sample_profiles(FleetConfig(n_clients=64, seed=2))
+        assert a != b
+
+    def test_cohort_mix_respected(self):
+        cfg = FleetConfig(n_clients=400, seed=0)
+        counts = cohort_counts(sample_profiles(cfg))
+        assert set(counts) <= set(COHORT_PRESETS)
+        # 30/50/20 mix within loose tolerance at n=400
+        assert 60 <= counts["fiber"] <= 180
+        assert 120 <= counts["lte"] <= 280
+        assert 30 <= counts["congested-edge"] <= 150
+
+    def test_profiles_within_cohort_bands(self):
+        for p in sample_profiles(FleetConfig(n_clients=100, seed=5)):
+            spec = COHORT_PRESETS[p.cohort]
+            assert spec.up_rate_bps[0] <= p.up_rate_bps <= spec.up_rate_bps[1]
+            assert spec.delay_ns[0] <= p.delay_ns <= spec.delay_ns[1]
+            assert spec.loss_p[0] <= p.loss_p <= spec.loss_p[1]
+            assert p.down_rate_bps == pytest.approx(
+                p.up_rate_bps * spec.down_up_ratio)
+
+    def test_unknown_cohort_rejected(self):
+        cfg = FleetConfig(n_clients=4, cohort_mix=(("dialup", 1.0),))
+        with pytest.raises(ValueError, match="dialup"):
+            sample_profiles(cfg)
+
+    def test_link_draws_deterministic(self):
+        p = sample_profiles(FleetConfig(n_clients=8, seed=9))[3]
+        up1, down1 = links_for(p)
+        up2, down2 = links_for(p)
+        for l1, l2 in ((up1, up2), (down1, down2)):
+            assert (l1.data_rate_bps, l1.delay_ns, l1.jitter_ns,
+                    l1.jitter_seed) == \
+                   (l2.data_rate_bps, l2.delay_ns, l2.jitter_ns,
+                    l2.jitter_seed)
+            assert l1.loss == l2.loss
+
+
+class TestLinkJitter:
+    def test_jitter_deterministic_and_bounded(self):
+        link = Link(1e8, 10_000_000, NoLoss(), jitter_ns=5_000_000,
+                    jitter_seed=42)
+        pkt = make_data_packet(1, 4, "10.0.0.2", b"x", txn=7)
+        d1 = link.propagation_ns(pkt)
+        assert d1 == link.propagation_ns(pkt)
+        assert 10_000_000 <= d1 < 15_000_000
+
+    def test_jitter_varies_per_packet(self):
+        link = Link(1e8, 10_000_000, NoLoss(), jitter_ns=5_000_000)
+        delays = {link.propagation_ns(
+            make_data_packet(s, 64, "10.0.0.2", b"x", txn=1))
+            for s in range(1, 65)}
+        assert len(delays) > 1
+
+    def test_zero_jitter_is_fixed_delay(self):
+        link = Link(1e8, 10_000_000, NoLoss())
+        pkt = make_data_packet(1, 1, "10.0.0.2", b"x")
+        assert link.propagation_ns(pkt) == 10_000_000
+        assert link.propagation_ns(None) == 10_000_000
+
+
+# --------------------------------------------------------------------------
+# Partial participation sampling
+# --------------------------------------------------------------------------
+def _build_simple(n_clients, cfg, train_value=1.0, train_times=None,
+                  weights=None):
+    sim = Simulator()
+    clients = []
+    for i in range(n_clients):
+        addr = f"10.1.2.{10 + i}"
+        sim.connect(addr, SERVER, Link(1e8, 1_000_000, NoLoss()),
+                    Link(1e8, 1_000_000, NoLoss()))
+
+        def fn(params, round_idx, client, v=train_value):
+            return ({k: np.full_like(p, v) for k, p in params.items()}, {})
+        tt = (train_times or {}).get(addr, 1_000_000)
+        c = FLClient(addr, fn, train_time_ns=tt)
+        if weights and addr in weights:
+            c.weight = weights[addr]
+        clients.append(c)
+    params = {"w": np.zeros((50,), np.float32)}
+    return sim, FederatedSystem(sim, SERVER, clients, params, cfg), clients
+
+
+class TestPartialParticipation:
+    def test_fraction_honored_and_deterministic(self):
+        cfg = FLConfig(participation_fraction=0.5, participation_seed=3)
+        _, sys_a, _ = _build_simple(8, cfg)
+        _, sys_b, _ = _build_simple(8, cfg)
+        ra, rb = sys_a.run_round(), sys_b.run_round()
+        assert len(ra.roster) == 4
+        assert ra.roster == rb.roster
+        assert ra.arrived == rb.arrived
+
+    def test_rosters_rotate_across_rounds(self):
+        cfg = FLConfig(participation_fraction=0.5, participation_seed=0)
+        _, system, _ = _build_simple(12, cfg)
+        rosters = {tuple(system.run_round().roster) for _ in range(6)}
+        assert len(rosters) > 1
+
+    def test_min_participants_floor(self):
+        cfg = FLConfig(participation_fraction=0.01, min_participants=2)
+        _, system, _ = _build_simple(6, cfg)
+        assert len(system.run_round().roster) == 2
+
+    def test_full_participation_unchanged(self):
+        cfg = FLConfig()   # participation_fraction=1.0 default
+        _, system, _ = _build_simple(5, cfg)
+        assert len(system.run_round().roster) == 5
+
+
+# --------------------------------------------------------------------------
+# Straggler deadline -> hand-computed weighted FedAvg over arrivals
+# --------------------------------------------------------------------------
+class TestStragglerAggregation:
+    def test_partial_aggregation_matches_hand_computed_fedavg(self):
+        """Deadline cuts the straggler; the global model must equal the
+        weighted FedAvg of exactly the arrived updates."""
+        sim = Simulator()
+        spec = [("10.1.2.10", 2.0, 3.0, 1_000_000),     # value, weight, fast
+                ("10.1.2.11", 10.0, 1.0, 2_000_000),
+                ("10.1.2.12", 99.0, 5.0, 50 * NS)]      # straggler
+        clients = []
+        for addr, value, weight, tt in spec:
+            sim.connect(addr, SERVER, Link(1e8, 1_000_000, NoLoss()),
+                        Link(1e8, 1_000_000, NoLoss()))
+
+            def fn(params, round_idx, client, v=value):
+                return ({k: np.full_like(p, v) for k, p in params.items()},
+                        {})
+            c = FLClient(addr, fn, train_time_ns=tt)
+            c.weight = weight
+            clients.append(c)
+        cfg = FLConfig(aggregation="fedavg", round_deadline_ns=2 * NS)
+        system = FederatedSystem(sim, SERVER, clients,
+                                 {"w": np.zeros((40,), np.float32)}, cfg)
+        res = system.run_round()
+        assert res.arrived == ["10.1.2.10", "10.1.2.11"]
+        assert "10.1.2.12" in res.roster
+        expected = (3.0 * 2.0 + 1.0 * 10.0) / (3.0 + 1.0)   # = 4.0
+        np.testing.assert_allclose(system.global_params["w"], expected,
+                                   atol=1e-6)
+
+    def test_fleet_round_outcome_bit_identical_across_builds(self):
+        """Same FleetConfig seed => same cohorts, same samples, same link
+        draws, bit-identical round outcomes and global model."""
+        def one():
+            fleet = FleetConfig(n_clients=24, seed=11,
+                                participation_fraction=0.5,
+                                round_deadline_ns=6 * NS)
+            obj = ConsensusObjective(24, 256, seed=11)
+            cfg = FLConfig(aggregation="fedavg",
+                           transport=TransportConfig(
+                               kind="mudp", timeout_ns=2 * NS))
+            _, system, profiles = build_fleet(fleet, obj.init_params(),
+                                              obj.train_fn, cfg)
+            results = [system.run_round() for _ in range(2)]
+            return profiles, results, system.global_params["w"]
+
+        pa, ra, wa = one()
+        pb, rb, wb = one()
+        assert pa == pb
+        for x, y in zip(ra, rb):
+            assert dataclasses.asdict(x) == dataclasses.asdict(y)
+        assert np.array_equal(wa, wb)        # bit-identical, not allclose
+
+
+# --------------------------------------------------------------------------
+# Every registered transport drives a fleet round
+# --------------------------------------------------------------------------
+class TestFleetAcrossTransports:
+    @pytest.mark.parametrize("kind", available_transports())
+    def test_fleet_round_completes(self, kind):
+        fleet = FleetConfig(n_clients=12, seed=3, participation_fraction=0.75,
+                            round_deadline_ns=15 * NS)
+        obj = ConsensusObjective(12, 128, seed=3)
+        cfg = FLConfig(aggregation="fedavg",
+                       transport=TransportConfig(kind=kind, timeout_ns=2 * NS,
+                                                 udp_deadline_ns=3 * NS))
+        _, system, _ = build_fleet(fleet, obj.init_params(), obj.train_fn,
+                                   cfg)
+        res = system.run_round()
+        assert len(res.roster) == 9
+        assert res.bytes_sent > 0
+        assert len(res.arrived) >= 1
+        assert obj.loss(system.global_params) < obj.loss(obj.init_params())
