@@ -35,12 +35,13 @@ NS_PER_SEC = 1_000_000_000
 
 
 def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
-              participation: float, deadline_ns: int, n_params: int) -> dict:
+              participation: float, deadline_ns: int, n_params: int,
+              engine: str = "batched") -> dict:
     """One (transport, fleet size) cell. Returns a JSON-ready dict whose
     every field derives from the simulation — no wall-clock anywhere."""
     fleet = FleetConfig(n_clients=n_clients, seed=seed,
                         participation_fraction=participation,
-                        round_deadline_ns=deadline_ns)
+                        round_deadline_ns=deadline_ns, engine=engine)
     objective = ConsensusObjective(n_clients, n_params, seed=seed)
     fl_cfg = FLConfig(
         aggregation="fedavg",
@@ -66,6 +67,9 @@ def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
             "packets_sent": r.packets_sent,
             "packets_dropped": r.packets_dropped,
             "retransmissions": r.retransmissions,
+            "data_packets": r.data_packets,
+            "nack_packets": r.nack_packets,
+            "parity_packets": r.parity_packets,
             "loss": loss,
         })
     sim_ns = sum(r["duration_ns"] for r in round_rows)
@@ -99,7 +103,7 @@ def run_matrix(args, transports: list[str]) -> tuple[dict, dict, dict]:
                     tr, n_clients=n_clients, rounds=args.rounds,
                     seed=args.seed, participation=args.participation,
                     deadline_ns=int(args.deadline_s * NS_PER_SEC),
-                    n_params=args.params)
+                    n_params=args.params, engine=args.engine)
             except Exception as e:  # noqa: BLE001 - a cell failure is a row
                 errors[f"{n_clients}/{tr}"] = f"{type(e).__name__}: {e}"
                 continue
@@ -153,6 +157,10 @@ def main() -> int:
     ap.add_argument("--transports", default=None,
                     help="comma-separated subset (default: every "
                          "registered transport)")
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "per_packet"],
+                    help="simulator engine (bit-identical results; "
+                         "batched is the fleet hot path)")
     ap.add_argument("--out", default="BENCH_fleet.json")
     ap.add_argument("--replay-check", action="store_true",
                     help="run the matrix twice and fail unless the "
@@ -179,6 +187,7 @@ def main() -> int:
             "deadline_s": args.deadline_s,
             "params": args.params,
             "transports": requested,
+            "engine": args.engine,
         },
         "fleets": fleets,
         "errors": errors,

@@ -12,10 +12,11 @@ import sys
 import time
 
 from benchmarks import (aggregation, codecs, fl_convergence, fleet_scale,
-                        kernels_bench, roofline, transport_comparison,
-                        transport_scenarios)
+                        kernels_bench, roofline, simcore,
+                        transport_comparison, transport_scenarios)
 
 SUITES = {
+    "simcore": simcore,
     "transport_scenarios": transport_scenarios,
     "transport_comparison": transport_comparison,
     "fleet_scale": fleet_scale,

@@ -1,0 +1,240 @@
+"""Benchmark — simulator core: the batched flight engine vs per-packet.
+
+Two workloads, both on the standard 64-client heterogeneous fleet topology
+(cohort link draws, jitter, loss — identical across engines):
+
+* ``fleet_burst`` — the simulator hot path: every client ships one model
+  update (default 1 MiB) to the server through the chosen transport.
+  Packets are built outside the timed region, so the numbers measure the
+  event engine (FIFO serialization, jitter/loss draws, delivery, protocol
+  state machines), not the packetizer.
+* ``fl_round`` — one end-to-end FL round (broadcast, local training,
+  uplink, aggregation) of the synthetic consensus objective: the honest
+  Amdahl view, where packetization and FL math dilute the engine speedup.
+
+Every cell runs under BOTH engines and fails loudly unless their replay
+digests (stats + final clock + payload bytes) are bit-identical — the
+benchmark doubles as an equivalence check.  Results land in ``--out``
+(default ``BENCH_simcore.json``): events/sec, wall seconds, and the
+batched/per-packet speedup per (workload, transport).
+
+  PYTHONPATH=src python benchmarks/simcore.py
+  PYTHONPATH=src python benchmarks/simcore.py --clients 64 --payload-kib 1024 \\
+      --transports mudp,udp --min-speedup 5
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+
+from repro.core import (ConsensusObjective, FLConfig, FleetConfig, Simulator,
+                        TransportConfig, available_transports, build_fleet,
+                        make_transport, packetize, sample_profiles)
+from repro.core.fleet import links_for
+
+NS = 1_000_000_000
+SERVER = "10.0.0.1"
+
+
+# --------------------------------------------------------------------------
+# Workloads
+# --------------------------------------------------------------------------
+def fleet_burst(engine: str, transport: str, *, n_clients: int,
+                payload: int, seed: int) -> dict:
+    """Every client uplinks one ``payload``-byte update through
+    ``transport`` over its drawn fleet link; returns engine metrics."""
+    profiles = sample_profiles(FleetConfig(n_clients=n_clients, seed=seed))
+    sim = Simulator(engine=engine)
+    for p in profiles:
+        up, down = links_for(p)
+        sim.connect(p.addr, SERVER, up, down)
+    tr = make_transport(transport)
+    cfg = TransportConfig(kind=transport, timeout_ns=16 * NS,
+                          udp_deadline_ns=24 * NS)
+    deliveries: list = []
+    tr.create_receiver(sim, sim.node(SERVER), cfg, deliveries.append)
+    data = bytes(range(256)) * (payload // 256)
+    bursts = [packetize(data, p.addr, txn=1, mtu=cfg.mtu) for p in profiles]
+    senders = [tr.create_sender(sim, sim.node(p.addr), sim.node(SERVER),
+                                pkts, cfg)
+               for p, pkts in zip(profiles, bursts)]
+    t0 = time.perf_counter()
+    for s in senders:
+        s.start()
+    sim.run()
+    wall_s = time.perf_counter() - t0
+    payload_hash = hashlib.sha256()
+    for blob in sorted((d.sender_addr.encode() + d.reassemble())
+                       for d in deliveries):
+        payload_hash.update(blob)
+    return {
+        "wall_s": wall_s,
+        "events": sim.events_processed,
+        "events_per_sec": sim.events_processed / wall_s if wall_s else None,
+        "packets_sent": sim.stats["packets_sent"],
+        "packets_delivered": sim.stats["packets_delivered"],
+        "deliveries": len(deliveries),
+        "digest": sim.stats_digest() + payload_hash.hexdigest()[:16],
+    }
+
+
+def fl_round(engine: str, transport: str, *, n_clients: int,
+             n_params: int, seed: int) -> dict:
+    """One full FL round on the fleet scenario engine."""
+    fleet = FleetConfig(n_clients=n_clients, seed=seed,
+                        participation_fraction=1.0,
+                        round_deadline_ns=120 * NS, engine=engine)
+    objective = ConsensusObjective(n_clients, n_params, seed=seed)
+    cfg = FLConfig(aggregation="fedavg",
+                   transport=TransportConfig(kind=transport,
+                                             timeout_ns=8 * NS,
+                                             udp_deadline_ns=12 * NS))
+    sim, system, _ = build_fleet(fleet, objective.init_params(),
+                                 objective.train_fn, cfg)
+    t0 = time.perf_counter()
+    r = system.run_round()
+    wall_s = time.perf_counter() - t0
+    return {
+        "wall_s": wall_s,
+        "events": sim.events_processed,
+        "events_per_sec": sim.events_processed / wall_s if wall_s else None,
+        "packets_sent": r.packets_sent,
+        "data_packets": r.data_packets,
+        "nack_packets": r.nack_packets,
+        "parity_packets": r.parity_packets,
+        "digest": (sim.stats_digest()
+                   + system.global_params["w"].tobytes().hex()[:32]),
+    }
+
+
+WORKLOADS = {"fleet_burst": fleet_burst, "fl_round": fl_round}
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+def run_cell(workload: str, transport: str, *, n_clients: int, payload: int,
+             n_params: int, seed: int, repeats: int) -> dict:
+    """One (workload, transport) cell under both engines; best-of-N wall
+    (robust to load spikes), plus the digest-equality verdict."""
+    cell: dict = {}
+    for engine in ("per_packet", "batched"):
+        best = None
+        for _ in range(repeats):
+            if workload == "fleet_burst":
+                m = fleet_burst(engine, transport, n_clients=n_clients,
+                                payload=payload, seed=seed)
+            else:
+                m = fl_round(engine, transport, n_clients=n_clients,
+                             n_params=n_params, seed=seed)
+            if best is None or m["wall_s"] < best["wall_s"]:
+                best = m
+        cell[engine] = best
+    pp, ba = cell["per_packet"], cell["batched"]
+    cell["digests_match"] = pp["digest"] == ba["digest"]
+    cell["speedup_events_per_sec"] = (
+        ba["events_per_sec"] / pp["events_per_sec"]
+        if pp["events_per_sec"] else None)
+    return cell
+
+
+def bench(rounds: int = 1):
+    """benchmarks.run harness entry: a small burst, both engines."""
+    rows = []
+    for tr in ("mudp", "udp"):
+        cell = run_cell("fleet_burst", tr, n_clients=16, payload=128 * 1024,
+                        n_params=1024, seed=0, repeats=1)
+        rows.append((
+            f"simcore/{tr}_burst_c16",
+            cell["batched"]["wall_s"] * 1e6,
+            f"speedup={cell['speedup_events_per_sec']:.2f}x"
+            f";eps={cell['batched']['events_per_sec']:.0f}"
+            f";identical={cell['digests_match']}"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--payload-kib", type=int, default=1024,
+                    help="fleet_burst: update size per client (KiB)")
+    ap.add_argument("--params", type=int, default=32768,
+                    help="fl_round: model size in float32 parameters")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per cell (best wall kept)")
+    ap.add_argument("--transports", default="mudp,udp,mudp+fec,tcp",
+                    help="comma-separated subset of registered transports")
+    ap.add_argument("--workloads", default="fleet_burst,fl_round")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless the best fleet_burst speedup reaches "
+                         "this factor (CI acceptance gate)")
+    ap.add_argument("--out", default="BENCH_simcore.json")
+    args = ap.parse_args()
+
+    transports = [t for t in args.transports.split(",") if t]
+    for t in transports:
+        if t not in available_transports():
+            ap.error(f"unknown transport {t!r}; registered: "
+                     f"{available_transports()}")
+    workloads = [w for w in args.workloads.split(",") if w]
+    for w in workloads:
+        if w not in WORKLOADS:
+            ap.error(f"unknown workload {w!r}; one of {sorted(WORKLOADS)}")
+
+    report: dict = {
+        "meta": {
+            "clients": args.clients,
+            "payload_kib": args.payload_kib,
+            "params": args.params,
+            "seed": args.seed,
+            "repeats": args.repeats,
+            "transports": transports,
+            "workloads": workloads,
+        },
+        "cells": {},
+    }
+    mismatches = []
+    for w in workloads:
+        report["cells"][w] = {}
+        for tr in transports:
+            cell = run_cell(w, tr, n_clients=args.clients,
+                            payload=args.payload_kib * 1024,
+                            n_params=args.params, seed=args.seed,
+                            repeats=args.repeats)
+            report["cells"][w][tr] = cell
+            if not cell["digests_match"]:
+                mismatches.append(f"{w}/{tr}")
+            print(f"simcore/{w}/{tr}: "
+                  f"per_packet={cell['per_packet']['wall_s']:.3f}s "
+                  f"batched={cell['batched']['wall_s']:.3f}s "
+                  f"speedup={cell['speedup_events_per_sec']:.2f}x "
+                  f"eps={cell['batched']['events_per_sec']:,.0f} "
+                  f"identical={cell['digests_match']}", flush=True)
+
+    best_burst = max(
+        (c["speedup_events_per_sec"] or 0.0
+         for c in report["cells"].get("fleet_burst", {}).values()),
+        default=0.0)
+    report["best_fleet_burst_speedup"] = best_burst
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}", flush=True)
+
+    if mismatches:
+        print(f"ENGINE DIVERGENCE: {mismatches}", file=sys.stderr)
+        return 2
+    if args.min_speedup and best_burst < args.min_speedup:
+        print(f"SPEEDUP GATE FAILED: best fleet_burst speedup "
+              f"{best_burst:.2f}x < {args.min_speedup}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,9 @@ a write-your-own walkthrough.
 
 from repro.core.aggregation import fedavg, pairwise_average, trimmed_mean
 from repro.core.channel import (BernoulliLoss, DropList, GilbertElliott, Link,
-                                NoLoss, DCN_LINK, PAPER_LINK, WAN_LINK)
+                                LossModel, NoLoss, keyed_uniform,
+                                keyed_uniforms, packet_key_arrays,
+                                DCN_LINK, PAPER_LINK, WAN_LINK)
 from repro.core.compression import (Codec, HexCodec, Int8Codec, RawCodec,
                                     TopKCodec, make_codec)
 from repro.core.fec import (FecMudpReceiver, FecMudpSender, FecMudpTransport,
@@ -38,7 +40,8 @@ from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
 
 __all__ = [
     "fedavg", "pairwise_average", "trimmed_mean",
-    "BernoulliLoss", "DropList", "GilbertElliott", "Link", "NoLoss",
+    "BernoulliLoss", "DropList", "GilbertElliott", "Link", "LossModel",
+    "NoLoss", "keyed_uniform", "keyed_uniforms", "packet_key_arrays",
     "DCN_LINK", "PAPER_LINK", "WAN_LINK",
     "Codec", "HexCodec", "Int8Codec", "RawCodec", "TopKCodec", "make_codec",
     "FecMudpReceiver", "FecMudpSender", "FecMudpTransport", "parity_groups",

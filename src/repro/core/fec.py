@@ -106,12 +106,16 @@ class FecMudpSender(MudpSender):
     def start(self) -> None:
         super().start()   # data burst + timer; no sim time elapses in between
         groups = parity_groups(self.total, self.fec_block, self.fec_parity)
-        for i, group in enumerate(groups):
-            pkt = make_parity_packet(i + 1, len(groups), group, self.packets,
-                                     self.node.addr, self.txn, self.total,
-                                     self.fec_block, self.fec_parity)
-            self.stats.parity_sent += 1
-            self.node.send(pkt, self.dest)
+        trailer = [
+            make_parity_packet(i + 1, len(groups), group, self.packets,
+                               self.node.addr, self.txn, self.total,
+                               self.fec_block, self.fec_parity)
+            for i, group in enumerate(groups)
+        ]
+        self.stats.parity_sent += len(trailer)
+        # The parity trailer queues behind the data flight on the same FIFO
+        # link — a second burst, vectorized under the batched engine.
+        self.node.send_burst(trailer, self.dest)
 
 
 # --------------------------------------------------------------------------
@@ -141,6 +145,17 @@ class FecMudpReceiver(MudpReceiver):
         self._graced: set[tuple[str, int]] = set()
 
     # -- packet dispatch --------------------------------------------------
+    def _ingest_run(self, pkts: list, i: int, j: int, arrivals: list) -> int:
+        """Bulk ingestion is only safe while no parity has arrived for the
+        transaction: once it has, every DATA arrival must run the repair
+        hook in :meth:`_on_packet`, so the rest of the flight permanently
+        falls back to the per-packet path."""
+        p0 = pkts[i]
+        if (p0.kind == PacketKind.DATA
+                and self._parity.get((p0.addr, p0.txn))):
+            return -1
+        return super()._ingest_run(pkts, i, j, arrivals)
+
     def _on_packet(self, pkt: Packet) -> bool:
         if pkt.kind == PacketKind.PARITY:
             self._on_parity(pkt)
@@ -186,9 +201,10 @@ class FecMudpReceiver(MudpReceiver):
                         st.received[s].payload.ljust(width, b"\x00"), "big")
             payload = acc.to_bytes(width, "big")[:lens[covered.index(seq)]]
             self.stats_repairs += 1
-            self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: FEC "
-                         f"repaired missing packet ({seq}, {st.total}, "
-                         f"{st.sender_addr}) from parity")
+            if self.sim.trace:
+                self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: FEC "
+                             f"repaired missing packet ({seq}, {st.total}, "
+                             f"{st.sender_addr}) from parity")
             # Inject through the inherited machinery so delivery/ACK logic
             # stays identical to a real arrival.
             MudpReceiver._on_packet(self, make_data_packet(

@@ -140,6 +140,10 @@ class FleetConfig:
     cohorts: Optional[dict[str, CohortSpec]] = None   # default COHORT_PRESETS
     seed: int = 0
     server_addr: str = "10.0.0.1"
+    # Simulator engine: "batched" (the vectorized flight engine — the fleet
+    # hot path) or "per_packet" (the reference event-per-packet loop).  The
+    # two are bit-for-bit identical, so this is purely a speed knob.
+    engine: str = "batched"
     # Round policy, forwarded into FLConfig by build_fleet().
     participation_fraction: float = 1.0
     min_participants: int = 1
@@ -260,7 +264,7 @@ def build_fleet(fleet: FleetConfig, global_params: Any,
         participation_seed=fleet.seed,
         round_deadline_ns=fleet.round_deadline_ns,
     )
-    sim = Simulator()
+    sim = Simulator(engine=fleet.engine)
     clients = []
     for i, p in enumerate(profiles):
         up, down = links_for(p)

@@ -26,6 +26,7 @@ packetizer and aggregation.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Callable, Optional
 
 from repro.core.packets import (Packet, PacketKind, make_ack_ok, make_nack)
@@ -54,6 +55,41 @@ class TxnStats:
         return self.end_ns - self.start_ns
 
 
+def prep_attempt(sender, seq: int) -> Packet:
+    """Shared (re)transmission bookkeeping for burst/window senders
+    (MUDP and TCP): bump the attempt counter, account data/retx stats,
+    and return the packet stamped with its attempt number."""
+    attempt = sender._attempts[seq]
+    sender._attempts[seq] = attempt + 1
+    sender.stats.data_sent += 1
+    if attempt > 0:
+        sender.stats.retransmissions += 1
+    pkt = sender.packets[seq]
+    if pkt.attempt != attempt:
+        pkt = dataclasses.replace(pkt, attempt=attempt)
+    return pkt
+
+
+def ingest_data_run(pkts: list, i: int, j: int, received: dict,
+                    addr: str, txn: int) -> int:
+    """The bulk-contract inner loop shared by the MUDP and UDP receivers:
+    verify-and-store consecutive *interior* DATA packets of transaction
+    ``(addr, txn)`` from ``pkts[i:j]``; stops at any kind/addr/txn
+    mismatch or the transaction's last packet.  Returns packets consumed.
+    """
+    adler32 = zlib.adler32
+    k = i
+    while k < j:
+        p = pkts[k]
+        if (p.kind != PacketKind.DATA or p.addr != addr or p.txn != txn
+                or p.seq == p.total):
+            break
+        if adler32(p.payload) & 0xFFFFFFFF == p.checksum:   # == p.verify()
+            received[p.seq] = p
+        k += 1
+    return k - i
+
+
 class MudpSender:
     """One transaction: ship ``packets`` to ``dest`` reliably."""
 
@@ -77,23 +113,34 @@ class MudpSender:
         self._attempts: dict[int, int] = {s: 0 for s in self.packets}
         self._timer: Optional[Timer] = None
         self._done = False
-        node.register(self._on_packet)
+        # Keyed registration: this sender only ever consumes ACK/NACK from
+        # (txn, responder), so the node dispatches by dict lookup — a
+        # broadcast of N concurrent senders stays O(1) per control packet.
+        node.register_keyed((self.txn, dest.addr), self._on_packet)
 
     # -- paper step 1: send in quick succession --------------------------
     def start(self) -> None:
         self.stats.start_ns = self.sim.now_ns
-        for seq in range(1, self.total + 1):
-            self._send(seq)
+        # One burst over one link: the batched engine plans the whole
+        # transaction's FIFO serialization, jitter and loss in one shot.
+        # Initial transmissions are all attempt 0, so the per-seq
+        # bookkeeping of _prep collapses to bulk counter updates.
+        if any(a != 0 for a in self._attempts.values()) or any(
+                p.attempt != 0 for p in self.packets.values()):
+            burst = [self._prep(seq) for seq in range(1, self.total + 1)]
+        else:
+            burst = [self.packets[seq] for seq in range(1, self.total + 1)]
+            self._attempts = {s: 1 for s in self._attempts}
+            self.stats.data_sent += self.total
+        self.node.send_burst(burst, self.dest)
         self._arm_timer()
 
+    def _prep(self, seq: int) -> Packet:
+        """Account one (re)transmission of ``seq`` and return the packet."""
+        return prep_attempt(self, seq)
+
     def _send(self, seq: int) -> None:
-        pkt = dataclasses.replace(self.packets[seq],
-                                  attempt=self._attempts[seq])
-        self._attempts[seq] += 1
-        self.stats.data_sent += 1
-        if pkt.attempt > 0:
-            self.stats.retransmissions += 1
-        self.node.send(pkt, self.dest)
+        self.node.send(self._prep(seq), self.dest)
 
     # -- paper step 3: the timer ------------------------------------------
     def _arm_timer(self) -> None:
@@ -114,10 +161,12 @@ class MudpSender:
         # "the sender resends the last packets to inform the receiver of the
         #  missing sequences with Y amount of maximum retries"
         self.stats.last_packet_retries += 1
-        self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: timer expired, "
-                     f"resending last packet ({self.total}, {self.total}, "
-                     f"{self.node.addr}) retry "
-                     f"{self.stats.last_packet_retries}/{self.max_retries}")
+        if self.sim.trace:
+            self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: timer "
+                         f"expired, resending last packet ({self.total}, "
+                         f"{self.total}, {self.node.addr}) retry "
+                         f"{self.stats.last_packet_retries}/"
+                         f"{self.max_retries}")
         self._send(self.total)
         self._arm_timer()
 
@@ -136,8 +185,10 @@ class MudpSender:
         if pkt.kind == PacketKind.NACK:
             self.stats.nacks_received += 1
             if 0 < pkt.seq <= self.total:
-                self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: NACK "
-                             f"for missing packet {pkt.seq}, resending")
+                if self.sim.trace:
+                    self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: "
+                                 f"NACK for missing packet {pkt.seq}, "
+                                 f"resending")
                 self._send(pkt.seq)
                 self._arm_timer()
             return True
@@ -149,7 +200,8 @@ class MudpSender:
         self.stats.completed = not failed
         self.stats.failed = failed
         self._cancel_timer()
-        self.node.unregister(self._on_packet)
+        self.node.unregister_keyed((self.txn, self.dest.addr),
+                                   self._on_packet)
         cb = self.on_fail if failed else self.on_complete
         if cb is not None:
             cb(self)
@@ -187,7 +239,34 @@ class MudpReceiver:
         self._rx: dict[tuple[str, int], _RxState] = {}
         self._completed: set[tuple[str, int]] = set()
         self.stats_nacks_sent = 0
-        node.register(self._on_packet)
+        node.register(self._on_packet, bulk=self._ingest_run)
+
+    def _ingest_run(self, pkts: list, i: int, j: int, arrivals: list) -> int:
+        """Batched-engine fast path: ingest consecutive DATA packets of one
+        flight in a single call (see ``Node.register`` for the contract).
+
+        Consumes a prefix of ``pkts[i:j]`` that behaves exactly like that
+        many :meth:`_on_packet` calls — interior (non-last) packets of one
+        un-completed transaction whose last packet has not been seen, where
+        the per-packet effect is precisely verify-and-store.  A completed
+        transaction (per-packet re-ACKs) or armed gap machinery declines
+        the flight permanently (-1); anything else unexpected declines the
+        due packet (0).
+        """
+        p0 = pkts[i]
+        if p0.kind != PacketKind.DATA:
+            return 0
+        key = (p0.addr, p0.txn)
+        if key in self._completed:
+            return -1
+        st = self._rx.get(key)
+        if st is None:
+            st = _RxState(total=p0.total, sender_addr=p0.addr,
+                          first_ns=self.sim.now_ns)
+            self._rx[key] = st
+        if st.saw_last:
+            return -1
+        return ingest_data_run(pkts, i, j, st.received, p0.addr, p0.txn)
 
     def _on_packet(self, pkt: Packet) -> bool:
         if pkt.kind != PacketKind.DATA:
@@ -204,12 +283,14 @@ class MudpReceiver:
                           first_ns=self.sim.now_ns)
             self._rx[key] = st
         if not pkt.verify():
-            self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: checksum "
-                         f"fail on {pkt}, treating as lost")
+            if self.sim.trace:
+                self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: "
+                             f"checksum fail on {pkt}, treating as lost")
             return True
         st.received[pkt.seq] = pkt
-        self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: got {pkt} "
-                     f"[{len(st.received)}/{st.total}]")
+        if self.sim.trace:
+            self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: got {pkt} "
+                         f"[{len(st.received)}/{st.total}]")
         if pkt.is_last:
             st.saw_last = True
         if st.saw_last and not self._try_deliver(key, st) and pkt.is_last:
@@ -222,6 +303,10 @@ class MudpReceiver:
 
     # -- paper receiver step 2 ---------------------------------------------
     def _try_deliver(self, key: tuple[str, int], st: _RxState) -> bool:
+        # O(1) fast path: fewer verified packets than Np means gaps for
+        # sure; the O(Np) scan only runs at (potential) completion.
+        if len(st.received) < st.total:
+            return False
         missing = [s for s in range(1, st.total + 1) if s not in st.received]
         if missing:
             return False
@@ -238,13 +323,17 @@ class MudpReceiver:
     def _report_gaps(self, key: tuple[str, int], st: _RxState) -> None:
         missing = [s for s in range(1, st.total + 1) if s not in st.received]
         # "If some packets are missing, send acknowledgements with sequence
-        #  numbers of only those missing packets."
-        for seq in missing:
-            self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: packet "
-                         f"{seq} is missing! requesting resend")
-            self.stats_nacks_sent += 1
-            self.node.send(make_nack(seq, st.total, self.node.addr, key[1]),
-                           self.sim.node(st.sender_addr))
+        #  numbers of only those missing packets."  The whole NACK volley
+        # goes out back-to-back, so it is one burst on the wire.
+        if self.sim.trace:
+            for seq in missing:
+                self.sim.log(f"t={self.sim.now_ns}ns {self.node.addr}: "
+                             f"packet {seq} is missing! requesting resend")
+        self.stats_nacks_sent += len(missing)
+        self.node.send_burst(
+            [make_nack(seq, st.total, self.node.addr, key[1])
+             for seq in missing],
+            self.sim.node(st.sender_addr))
         # "Start the timer for determining when to resend the acknowledgement"
         if st.nack_timer is not None:
             st.nack_timer.cancel()

@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.core.compression import Codec, RawCodec
-from repro.core.packets import Packet, make_data_packet
+from repro.core.packets import HEADER_BYTES, Packet, make_data_packet
 
 DEFAULT_MTU = 1500
 _IP_UDP_OVERHEAD = 28  # bytes of IP+UDP headers a real datagram would carry
@@ -108,7 +108,14 @@ class Packetizer:
         return unflatten_from_vector(vec, template)
 
     def wire_bytes(self, tree: Any) -> int:
-        """Total bytes on the wire for this tree under this codec + MTU."""
+        """Total bytes on the wire for this tree under this codec + MTU.
+
+        Computed arithmetically (payload bytes + one header per packet)
+        instead of materializing a throwaway packet list just to sum sizes.
+        """
         data = self.codec.encode(flatten_to_vector(tree))
-        pkts = packetize(data, "0.0.0.0", 0, self.mtu)
-        return sum(p.size_bytes for p in pkts)
+        payload_max = self.mtu - _IP_UDP_OVERHEAD
+        if payload_max <= 0:
+            raise ValueError("mtu too small")
+        total = max(1, -(-len(data) // payload_max))
+        return len(data) + total * HEADER_BYTES

@@ -57,7 +57,7 @@ def checksum32(payload: bytes) -> int:
     return zlib.adler32(payload) & 0xFFFFFFFF
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Packet:
     """One simulated datagram.
 

@@ -81,6 +81,11 @@ class RoundResult:
     retransmissions: int
     metrics: dict = dataclasses.field(default_factory=dict)
     roster: list[str] = dataclasses.field(default_factory=list)
+    # Per-kind traffic split (from the simulator's per-PacketKind counters)
+    # so benchmarks separate payload from protocol chatter.
+    data_packets: int = 0
+    nack_packets: int = 0
+    parity_packets: int = 0
 
 
 # --------------------------------------------------------------------------
@@ -268,6 +273,12 @@ class FederatedSystem:
                              - stats0["packets_dropped"]),
             retransmissions=self._round_retx,
             roster=sorted(self._roster),
+            data_packets=(stats1.get("sent_data", 0)
+                          - stats0.get("sent_data", 0)),
+            nack_packets=(stats1.get("sent_nack", 0)
+                          - stats0.get("sent_nack", 0)),
+            parity_packets=(stats1.get("sent_parity", 0)
+                            - stats0.get("sent_parity", 0)),
         )
         self.history.append(result)
         if self.on_round_end is not None:

@@ -10,10 +10,9 @@ modelling SACK or timestamps.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Optional
 
-from repro.core.mudp import TxnStats
+from repro.core.mudp import TxnStats, prep_attempt
 from repro.core.packets import Packet, PacketKind
 from repro.core.simulator import Node, Simulator, Timer
 
@@ -45,7 +44,9 @@ class TcpSender:
         self._timer: Optional[Timer] = None
         self._done = False
         self._established = False
-        node.register(self._on_packet)
+        # Keyed on (txn, responder) — see MudpSender: O(1) control-packet
+        # dispatch however many concurrent senders share this node.
+        node.register_keyed((self.txn, dest.addr), self._on_packet)
 
     # -- handshake ---------------------------------------------------------
     def start(self) -> None:
@@ -56,19 +57,21 @@ class TcpSender:
 
     # -- window pump ---------------------------------------------------------
     def _pump(self) -> None:
+        burst = []
         while (self.next_seq <= self.total
                and self.next_seq < self.base + int(self.cwnd)):
-            self._send(self.next_seq)
+            burst.append(self._prep(self.next_seq))
             self.next_seq += 1
+        if burst:
+            # The whole window goes out back-to-back: one flight under the
+            # batched engine (a full cwnd once past slow start).
+            self.node.send_burst(burst, self.dest)
+
+    def _prep(self, seq: int):
+        return prep_attempt(self, seq)
 
     def _send(self, seq: int) -> None:
-        pkt = dataclasses.replace(self.packets[seq],
-                                  attempt=self._attempts[seq])
-        self._attempts[seq] += 1
-        self.stats.data_sent += 1
-        if pkt.attempt > 0:
-            self.stats.retransmissions += 1
-        self.node.send(pkt, self.dest)
+        self.node.send(self._prep(seq), self.dest)
 
     # -- events ----------------------------------------------------------------
     def _on_packet(self, pkt: Packet) -> bool:
@@ -143,7 +146,8 @@ class TcpSender:
         self.stats.failed = failed
         if self._timer is not None:
             self._timer.cancel()
-        self.node.unregister(self._on_packet)
+        self.node.unregister_keyed((self.txn, self.dest.addr),
+                                   self._on_packet)
         cb = self.on_fail if failed else self.on_complete
         if cb is not None:
             cb(self)
