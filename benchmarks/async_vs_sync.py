@@ -1,0 +1,166 @@
+"""Benchmark — async (FedBuff-style) vs sync scheduling: simulated
+time-to-target-loss on the congested-edge cohort.
+
+Same seeded fleet, same links, same transport, same
+:class:`ConsensusObjective`; the only variable is ``FleetConfig.mode``.
+Sync pays the round barrier (every round waits for its slowest sampled
+client or the deadline); async aggregates whenever ``buffer_k`` updates
+are buffered while clients re-enter at their own cadence, so stragglers
+stop gating progress.  The metric is the simulated wall-clock at which the
+global loss first reaches ``target_frac * L0`` — fully deterministic, so
+``--check`` can gate CI on the acceptance criterion:
+
+    async time-to-target <= 0.8 x sync time-to-target
+
+  PYTHONPATH=src python benchmarks/async_vs_sync.py
+  PYTHONPATH=src python benchmarks/async_vs_sync.py --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import (ConsensusObjective, FLConfig, FleetConfig,
+                        TransportConfig, build_fleet)
+
+NS = 1_000_000_000
+
+
+def time_to_target(mode: str, *, n_clients: int, seed: int,
+                   target_frac: float, n_params: int, max_rounds: int,
+                   transport: str, buffer_k: int, deadline_ns: int,
+                   engine: str = "batched") -> dict:
+    """Run one mode until the loss target is crossed (or max_rounds)."""
+    fleet = FleetConfig(n_clients=n_clients, seed=seed, mode=mode,
+                        buffer_k=buffer_k, engine=engine,
+                        cohort_mix=(("congested-edge", 1.0),),
+                        round_deadline_ns=deadline_ns)
+    objective = ConsensusObjective(n_clients, n_params, seed=seed)
+    cfg = FLConfig(aggregation="fedavg",
+                   transport=TransportConfig(kind=transport,
+                                             timeout_ns=2 * NS,
+                                             udp_deadline_ns=3 * NS))
+    sim, system, _ = build_fleet(fleet, objective.init_params(),
+                                 objective.train_fn, cfg)
+    loss0 = objective.loss(system.global_params)
+    target = target_frac * loss0
+    trace: list[dict] = []
+
+    def on_round(res, params):
+        trace.append({"round": res.round_idx, "sim_ns": sim.now_ns,
+                      "loss": objective.loss(params),
+                      "arrived": len(res.arrived)})
+    system.on_round_end = on_round
+    t0 = time.perf_counter()
+    system.run_rounds(max_rounds)
+    wall_s = time.perf_counter() - t0
+
+    crossed = next((row for row in trace if row["loss"] <= target), None)
+    return {
+        "mode": mode,
+        "initial_loss": loss0,
+        "target_loss": target,
+        "rounds_run": len(trace),
+        "rounds_to_target": crossed["round"] + 1 if crossed else None,
+        "sim_ns_to_target": crossed["sim_ns"] if crossed else None,
+        "final_loss": trace[-1]["loss"] if trace else loss0,
+        "trace": trace,
+        "wall_s": wall_s,
+    }
+
+
+def compare(args) -> dict:
+    kw = dict(n_clients=args.clients, seed=args.seed,
+              target_frac=args.target_frac, n_params=args.params,
+              transport=args.transport, buffer_k=args.buffer_k,
+              deadline_ns=int(args.deadline_s * NS), engine=args.engine)
+    # Sync rounds are ~an order of magnitude longer than async buffer
+    # windows, so it needs far fewer iterations for the same sim-time.
+    sync = time_to_target("sync", max_rounds=args.max_rounds, **kw)
+    async_ = time_to_target("async", max_rounds=8 * args.max_rounds, **kw)
+    ratio = None
+    if sync["sim_ns_to_target"] and async_["sim_ns_to_target"]:
+        ratio = async_["sim_ns_to_target"] / sync["sim_ns_to_target"]
+    return {"meta": vars(args), "sync": sync, "async": async_,
+            "time_ratio_async_over_sync": ratio}
+
+
+def bench(rounds: int = 1):
+    """benchmarks.run harness entry: one small comparison cell."""
+    rows = []
+    ns = argparse.Namespace(clients=16, seed=0, target_frac=0.1, params=1024,
+                            max_rounds=8, transport="mudp", buffer_k=4,
+                            deadline_s=8.0, engine="batched", check=False,
+                            out=None)
+    report = compare(ns)
+    for mode in ("sync", "async"):
+        cell = report[mode]
+        rows.append((f"async_vs_sync/{mode}_c16",
+                     cell["wall_s"] * 1e6,
+                     f"sim_s_to_target={(cell['sim_ns_to_target'] or 0) / 1e9:.2f}"
+                     f";rounds={cell['rounds_to_target']}"
+                     f";final_loss={cell['final_loss']:.4f}"))
+    ratio = report["time_ratio_async_over_sync"]
+    rows.append(("async_vs_sync/ratio", 0.0,
+                 f"async/sync={ratio:.3f}" if ratio else "no_crossing"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--target-frac", type=float, default=0.05,
+                    help="target loss as a fraction of the initial loss")
+    ap.add_argument("--params", type=int, default=2048)
+    ap.add_argument("--max-rounds", type=int, default=20,
+                    help="sync round budget (async gets 8x)")
+    ap.add_argument("--transport", default="mudp")
+    ap.add_argument("--buffer-k", type=int, default=8)
+    ap.add_argument("--deadline-s", type=float, default=8.0,
+                    help="sync round deadline / async session watchdog")
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "per_packet"])
+    ap.add_argument("--out", default=None,
+                    help="optional JSON report path")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless async time-to-target is "
+                         "<= 0.8x sync (both must cross)")
+    args = ap.parse_args()
+
+    report = compare(args)
+    for mode in ("sync", "async"):
+        cell = report[mode]
+        sim_s = (cell["sim_ns_to_target"] or 0) / 1e9
+        print(f"{mode:>5}: L0={cell['initial_loss']:.3f} -> target "
+              f"{cell['target_loss']:.4f} in "
+              f"{cell['rounds_to_target']} rounds, sim t={sim_s:.2f}s "
+              f"(wall {cell['wall_s']:.2f}s)", flush=True)
+    ratio = report["time_ratio_async_over_sync"]
+    if ratio is not None:
+        print(f"async reaches target in {ratio:.2f}x the sync sim-time")
+    else:
+        print("WARNING: a mode never crossed the target", file=sys.stderr)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
+
+    if args.check:
+        if ratio is None:
+            print("CHECK FAILED: no crossing", file=sys.stderr)
+            return 1
+        if ratio > 0.8:
+            print(f"CHECK FAILED: async/sync = {ratio:.3f} > 0.8",
+                  file=sys.stderr)
+            return 1
+        print("check passed: async/sync <= 0.8")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,12 +36,16 @@ NS_PER_SEC = 1_000_000_000
 
 def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
               participation: float, deadline_ns: int, n_params: int,
-              engine: str = "batched") -> dict:
+              engine: str = "batched", mode: str = "sync",
+              buffer_k: int = 8) -> dict:
     """One (transport, fleet size) cell. Returns a JSON-ready dict whose
-    every field derives from the simulation — no wall-clock anywhere."""
+    every field derives from the simulation — no wall-clock anywhere.
+    ``mode="async"`` runs FedBuff-style scheduling: each row is one
+    buffered aggregation instead of one barrier round."""
     fleet = FleetConfig(n_clients=n_clients, seed=seed,
                         participation_fraction=participation,
-                        round_deadline_ns=deadline_ns, engine=engine)
+                        round_deadline_ns=deadline_ns, engine=engine,
+                        mode=mode, buffer_k=buffer_k)
     objective = ConsensusObjective(n_clients, n_params, seed=seed)
     fl_cfg = FLConfig(
         aggregation="fedavg",
@@ -52,9 +56,12 @@ def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
                                         objective.train_fn, fl_cfg)
     loss0 = objective.loss(system.global_params)
     round_rows, losses = [], []
-    for _ in range(rounds):
-        r = system.run_round()
-        loss = objective.loss(system.global_params)
+
+    # Loss must be sampled per aggregation event: under async scheduling
+    # rounds complete *inside* one run_rounds() call, so a post-hoc loop
+    # would only ever see the final model.
+    def _on_round(r, params):
+        loss = objective.loss(params)
         losses.append(loss)
         round_rows.append({
             "round": r.round_idx,
@@ -70,15 +77,23 @@ def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
             "data_packets": r.data_packets,
             "nack_packets": r.nack_packets,
             "parity_packets": r.parity_packets,
+            "staleness_clamped": r.staleness_clamped,
+            "metrics": r.metrics,
             "loss": loss,
         })
+
+    system.on_round_end = _on_round
+    system.run_rounds(rounds)
     sim_ns = sum(r["duration_ns"] for r in round_rows)
+    # len(round_rows), not the requested count: an async run may drain
+    # early with fewer aggregations than asked for.
     return {
         "cohorts": cohort_counts(profiles),
         "profiles_digest": profiles_digest(profiles),
         "rounds": round_rows,
         "sim_time_ns": sim_ns,
-        "rounds_per_sim_sec": (rounds * NS_PER_SEC / sim_ns) if sim_ns else None,
+        "rounds_per_sim_sec": (len(round_rows) * NS_PER_SEC / sim_ns)
+        if sim_ns else None,
         "bytes_on_wire": sum(r["bytes_sent"] for r in round_rows),
         "retransmissions": sum(r["retransmissions"] for r in round_rows),
         "initial_loss": loss0,
@@ -103,7 +118,8 @@ def run_matrix(args, transports: list[str]) -> tuple[dict, dict, dict]:
                     tr, n_clients=n_clients, rounds=args.rounds,
                     seed=args.seed, participation=args.participation,
                     deadline_ns=int(args.deadline_s * NS_PER_SEC),
-                    n_params=args.params, engine=args.engine)
+                    n_params=args.params, engine=args.engine,
+                    mode=args.mode, buffer_k=args.buffer_k)
             except Exception as e:  # noqa: BLE001 - a cell failure is a row
                 errors[f"{n_clients}/{tr}"] = f"{type(e).__name__}: {e}"
                 continue
@@ -161,6 +177,13 @@ def main() -> int:
                     choices=["batched", "per_packet"],
                     help="simulator engine (bit-identical results; "
                          "batched is the fleet hot path)")
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="scheduling policy: sync round barrier or "
+                         "FedBuff-style async (each row is one buffered "
+                         "aggregation; --deadline-s becomes the "
+                         "per-session watchdog)")
+    ap.add_argument("--buffer-k", type=int, default=8,
+                    help="async only: updates buffered per aggregation")
     ap.add_argument("--out", default="BENCH_fleet.json")
     ap.add_argument("--replay-check", action="store_true",
                     help="run the matrix twice and fail unless the "
@@ -188,6 +211,8 @@ def main() -> int:
             "params": args.params,
             "transports": requested,
             "engine": args.engine,
+            "mode": args.mode,
+            "buffer_k": args.buffer_k,
         },
         "fleets": fleets,
         "errors": errors,

@@ -11,8 +11,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import (aggregation, codecs, fl_convergence, fleet_scale,
-                        kernels_bench, roofline, simcore,
+from benchmarks import (aggregation, async_vs_sync, codecs, fl_convergence,
+                        fleet_scale, kernels_bench, roofline, simcore,
                         transport_comparison, transport_scenarios)
 
 SUITES = {
@@ -20,6 +20,7 @@ SUITES = {
     "transport_scenarios": transport_scenarios,
     "transport_comparison": transport_comparison,
     "fleet_scale": fleet_scale,
+    "async_vs_sync": async_vs_sync,
     "fl_convergence": fl_convergence,
     "codecs": codecs,
     "aggregation": aggregation,

@@ -30,6 +30,9 @@ from repro.core.packets import (Packet, PacketKind, make_ack_ok,
                                 make_data_packet, make_nack)
 from repro.core.rounds import (FederatedSystem, FLClient, FLConfig,
                                RoundResult)
+from repro.core.scheduling import (SCHEDULERS, AsyncScheduler, SyncScheduler,
+                                   make_scheduler)
+from repro.core.server import ClientPool, ClientSession, ServerCore
 from repro.core.simulator import Node, Simulator
 from repro.core.tcp import TcpReceiver, TcpSender
 from repro.core.transport import (Delivery, Transport, TransportCaps,
@@ -53,6 +56,8 @@ __all__ = [
     "unflatten_from_vector",
     "Packet", "PacketKind", "make_ack_ok", "make_data_packet", "make_nack",
     "FederatedSystem", "FLClient", "FLConfig", "RoundResult",
+    "SCHEDULERS", "AsyncScheduler", "SyncScheduler", "make_scheduler",
+    "ClientPool", "ClientSession", "ServerCore",
     "Node", "Simulator",
     "TcpReceiver", "TcpSender",
     "Delivery", "Transport", "TransportCaps", "TransportConfig",

@@ -256,7 +256,8 @@ class FecMudpTransport(Transport):
 
     name = "mudp+fec"
     caps = TransportCaps(reliable=True, partial_delivery=False,
-                         has_handshake=False, supports_fail_cb=True)
+                         has_handshake=False, supports_fail_cb=True,
+                         concurrent_txns=True)
 
     def create_sender(self, sim, src, dst, packets, cfg, *,
                       on_complete=None, on_fail=None):

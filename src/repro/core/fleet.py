@@ -25,10 +25,12 @@ step: it turns the paper topology into a *scenario engine* —
   analytically computable, giving benchmarks a deterministic
   rounds-to-target-loss metric without touching real data.
 
-Partial participation and straggler cutoffs are *not* implemented here —
-they are first-class in ``repro.core.rounds`` (``participation_fraction``,
-``round_deadline_ns``); :class:`FleetConfig` simply carries the knobs.
-See ``docs/SCENARIOS.md`` for the full semantics.
+Partial participation, straggler cutoffs, and the scheduling mode are
+*not* implemented here — they are first-class in ``repro.core.rounds`` /
+``repro.core.scheduling`` (``participation_fraction``,
+``round_deadline_ns``, ``mode="sync"|"async"``, ``buffer_k``);
+:class:`FleetConfig` simply carries the knobs.  See ``docs/SCENARIOS.md``
+and ``docs/ASYNC.md`` for the full semantics.
 """
 
 from __future__ import annotations
@@ -66,6 +68,12 @@ class CohortSpec:
     bursty: bool = False            # Gilbert-Elliott instead of Bernoulli
     train_time_ns: Range = (500_000_000, 1_000_000_000)
     weight: Range = (0.5, 2.0)      # |D_k| proxy for weighted FedAvg
+    # Async re-entry cadence: how long the device stays unavailable after
+    # finishing an upload before it asks for new work (charging, other
+    # apps, duty cycling).  Ignored by sync scheduling, where the round
+    # barrier sets the cadence.  Drawn from its own RNG stream so adding
+    # this field left every pre-existing profile draw bit-identical.
+    cadence_ns: Range = (0, 0)
 
 
 #: The presets the CI scenario matrix exercises. ``fiber`` is the
@@ -82,6 +90,7 @@ COHORT_PRESETS: dict[str, CohortSpec] = {
         loss_p=(0.0, 0.001),
         bursty=False,
         train_time_ns=(200_000_000, 500_000_000),  # 0.2-0.5 s
+        cadence_ns=(50_000_000, 200_000_000),      # 50-200 ms
     ),
     "lte": CohortSpec(
         name="lte",
@@ -92,6 +101,7 @@ COHORT_PRESETS: dict[str, CohortSpec] = {
         loss_p=(0.005, 0.03),
         bursty=False,
         train_time_ns=(500_000_000, 2_000_000_000),
+        cadence_ns=(200_000_000, 1_000_000_000),   # 0.2-1 s
     ),
     "congested-edge": CohortSpec(
         name="congested-edge",
@@ -102,6 +112,7 @@ COHORT_PRESETS: dict[str, CohortSpec] = {
         loss_p=(0.05, 0.15),
         bursty=True,
         train_time_ns=(1_000_000_000, 5_000_000_000),
+        cadence_ns=(500_000_000, 3_000_000_000),   # 0.5-3 s
     ),
 }
 
@@ -129,6 +140,7 @@ class ClientProfile:
     train_time_ns: int
     weight: float
     seed: int                       # base seed for this client's link RNGs
+    cadence_ns: int = 0             # async re-entry gap (sync ignores it)
 
 
 @dataclasses.dataclass
@@ -148,6 +160,12 @@ class FleetConfig:
     participation_fraction: float = 1.0
     min_participants: int = 1
     round_deadline_ns: Optional[int] = None
+    # Scheduling policy: "sync" (round barrier) or "async" (FedBuff-style
+    # buffered aggregation over overlapping sessions; docs/ASYNC.md).
+    # Under async, round_deadline_ns becomes the per-session watchdog and
+    # buffer_k is the aggregation trigger.
+    mode: str = "sync"
+    buffer_k: int = 8
 
     def cohort_specs(self) -> dict[str, CohortSpec]:
         return self.cohorts if self.cohorts is not None else COHORT_PRESETS
@@ -182,6 +200,10 @@ def sample_profiles(cfg: FleetConfig) -> list[ClientProfile]:
         cum.append((name, acc))
 
     rng = random.Random(hash((int(cfg.seed), 0xF1EE7)))
+    # Cadence draws come from their own stream: appending them to the main
+    # stream would have shifted every draw after the first client and
+    # silently re-rolled all pre-existing cohorts for a given seed.
+    cadence_rng = random.Random(hash((int(cfg.seed), 0xCADE)))
 
     def u(lo: float, hi: float) -> float:
         return lo + (hi - lo) * rng.random()
@@ -210,6 +232,9 @@ def sample_profiles(cfg: FleetConfig) -> list[ClientProfile]:
             weight=u(*spec.weight),
             # Distinct per-client base seed; link RNGs offset from it.
             seed=int(cfg.seed) * 1_000_003 + i * 4,
+            cadence_ns=int(spec.cadence_ns[0]
+                           + (spec.cadence_ns[1] - spec.cadence_ns[0])
+                           * cadence_rng.random()),
         ))
     return profiles
 
@@ -263,6 +288,8 @@ def build_fleet(fleet: FleetConfig, global_params: Any,
         min_participants=fleet.min_participants,
         participation_seed=fleet.seed,
         round_deadline_ns=fleet.round_deadline_ns,
+        mode=fleet.mode,
+        buffer_k=fleet.buffer_k,
     )
     sim = Simulator(engine=fleet.engine)
     clients = []
@@ -271,7 +298,8 @@ def build_fleet(fleet: FleetConfig, global_params: Any,
         sim.connect(p.addr, fleet.server_addr, up, down)
         clients.append(FLClient(p.addr, train_fn_factory(i, p),
                                 train_time_ns=p.train_time_ns,
-                                weight=p.weight))
+                                weight=p.weight,
+                                cadence_ns=p.cadence_ns))
     system = FederatedSystem(sim, fleet.server_addr, clients, global_params,
                              fl_cfg)
     return sim, system, profiles

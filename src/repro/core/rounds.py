@@ -15,457 +15,107 @@ Beyond the paper (required at thousand-node scale):
  * delta transmission + lossy codecs with error feedback;
  * pluggable transport (any name in ``available_transports()``, dispatched
    through the ``repro.core.transport`` registry) and aggregation
-   (pairwise | fedavg | trimmed_mean).
+   (pairwise | fedavg | trimmed_mean, numpy or Pallas-kernel backend);
+ * pluggable **scheduling**: ``FLConfig.mode`` selects the round policy —
+   ``"sync"`` (the paper's barrier, bit-compatible with the historical
+   loop) or ``"async"`` (FedBuff-style overlapping rounds, see
+   ``docs/ASYNC.md``).
+
+This module is the stable facade.  The event-driven mechanics live in
+``repro.core.server`` (per-client :class:`ClientSession` pipelines over one
+:class:`ServerCore`); the policies live in ``repro.core.scheduling``.
+``FLConfig`` / ``RoundResult`` / ``FLClient`` / ``ClientPool`` are defined
+in ``repro.core.server`` and re-exported here, alongside
+``TransportConfig``, for backward compatibility.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import random
 from typing import Any, Callable, Optional
 
-import numpy as np
-
-from repro.core import aggregation as agg
-from repro.core.compression import ErrorFeedback, make_codec
-from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
-                                   unflatten_from_vector)
+from repro.core.scheduling import make_scheduler, sample_participants  # noqa: F401
+from repro.core.server import (ClientPool, ClientSession, FLClient,  # noqa: F401
+                               FLConfig, RoundResult, ServerCore)
 from repro.core.simulator import Simulator
-from repro.core.transport import (Delivery, Transport, TransportConfig,
-                                  make_transport, validate_transport_kind)
+from repro.core.transport import TransportConfig  # noqa: F401  (re-export)
+
+__all__ = [
+    "ClientPool", "ClientSession", "FederatedSystem", "FLClient", "FLConfig",
+    "RoundResult", "ServerCore", "TransportConfig",
+]
 
 
-# --------------------------------------------------------------------------
-# Configuration (TransportConfig lives with the transport registry and is
-# re-exported here for backward compatibility)
-# --------------------------------------------------------------------------
-@dataclasses.dataclass
-class FLConfig:
-    transport: TransportConfig = dataclasses.field(
-        default_factory=TransportConfig)
-    aggregation: str = "fedavg"          # pairwise (paper Eq.1) | fedavg | trimmed_mean
-    send_deltas: bool = False            # ship (trained - received) instead of weights
-    error_feedback: bool = False         # residual compensation for lossy codecs
-    broadcast_model: bool = True         # server->client downlink each round
-    round_deadline_ns: Optional[int] = None
-    server_lr: float = 1.0               # for delta aggregation
-    staleness_discount: float = 0.5      # late update weight *= discount^age
-    unhealthy_after_failures: int = 2
-    readmit_after_rounds: int = 2
-    # Partial participation (fleet-scale): each round samples
-    # round(participation_fraction * |active|) clients, at least
-    # min_participants, via a seeded Fisher-Yates draw keyed by
-    # (participation_seed, round_idx) — deterministic across Python versions
-    # because it only consumes Random.random().
-    participation_fraction: float = 1.0
-    min_participants: int = 1
-    participation_seed: int = 0
-
-    def __post_init__(self) -> None:
-        # Fail at construction time (with the registered names) rather than
-        # deep inside receiver setup; also covers dataclasses.replace(...).
-        validate_transport_kind(self.transport.kind)
-
-
-@dataclasses.dataclass
-class RoundResult:
-    round_idx: int
-    duration_ns: int
-    arrived: list[str]
-    failed: list[str]
-    skipped_unhealthy: list[str]
-    late_folded: int
-    bytes_sent: int
-    packets_sent: int
-    packets_dropped: int
-    retransmissions: int
-    metrics: dict = dataclasses.field(default_factory=dict)
-    roster: list[str] = dataclasses.field(default_factory=list)
-    # Per-kind traffic split (from the simulator's per-PacketKind counters)
-    # so benchmarks separate payload from protocol chatter.
-    data_packets: int = 0
-    nack_packets: int = 0
-    parity_packets: int = 0
-
-
-# --------------------------------------------------------------------------
-# Client
-# --------------------------------------------------------------------------
-class FLClient:
-    """One federated client.
-
-    ``train_fn(params, round_idx, client) -> (new_params, metrics)`` runs real
-    (JAX) local training; ``train_time_ns`` models how long that takes inside
-    the simulation (heterogeneous values create stragglers).
-    """
-
-    def __init__(self, addr: str, train_fn: Callable, *,
-                 train_time_ns: int = 1_000_000_000,
-                 weight: float = 1.0):
-        self.addr = addr
-        self.train_fn = train_fn
-        self.train_time_ns = train_time_ns
-        self.weight = weight
-        self.params: Any = None          # local copy of the global model
-        self.error_feedback = ErrorFeedback()
-        self.metrics_history: list[dict] = []
-
-
-class ClientPool:
-    """Elastic membership with health tracking."""
-
-    def __init__(self, clients: list[FLClient], *,
-                 unhealthy_after: int = 2, readmit_after: int = 2):
-        self.clients: dict[str, FLClient] = {c.addr: c for c in clients}
-        self.failures: dict[str, int] = {c.addr: 0 for c in clients}
-        self.benched_until: dict[str, int] = {}
-        self.unhealthy_after = unhealthy_after
-        self.readmit_after = readmit_after
-
-    def add(self, client: FLClient) -> None:
-        self.clients[client.addr] = client
-        self.failures[client.addr] = 0
-
-    def remove(self, addr: str) -> None:
-        self.clients.pop(addr, None)
-        self.failures.pop(addr, None)
-        self.benched_until.pop(addr, None)
-
-    def active(self, round_idx: int) -> list[FLClient]:
-        out = []
-        for addr, c in self.clients.items():
-            if self.benched_until.get(addr, -1) > round_idx:
-                continue
-            out.append(c)
-        return out
-
-    def benched(self, round_idx: int) -> list[str]:
-        return [a for a, r in self.benched_until.items() if r > round_idx]
-
-    def record_failure(self, addr: str, round_idx: int) -> None:
-        self.failures[addr] = self.failures.get(addr, 0) + 1
-        if self.failures[addr] >= self.unhealthy_after:
-            self.benched_until[addr] = round_idx + 1 + self.readmit_after
-            self.failures[addr] = 0
-
-    def record_success(self, addr: str) -> None:
-        self.failures[addr] = 0
-
-
-# --------------------------------------------------------------------------
-# The federated system
-# --------------------------------------------------------------------------
 class FederatedSystem:
-    """Server + clients + transport over one Simulator."""
+    """Server + clients + transport over one Simulator.
+
+    A thin facade binding a :class:`ServerCore` (mechanics) to the
+    scheduler named by ``cfg.mode`` (policy).  ``run_round`` /
+    ``run_rounds`` keep their historical signatures: under ``sync`` each
+    call is one barrier round; under ``async`` each result is one buffered
+    aggregation and ``run_rounds(n)`` performs up to ``n`` of them over
+    continuously overlapping client sessions.
+    """
 
     def __init__(self, sim: Simulator, server_addr: str,
                  clients: list[FLClient], global_params: Any,
                  cfg: Optional[FLConfig] = None):
-        self.sim = sim
         self.cfg = cfg or FLConfig()
+        self.sim = sim
         self.server_addr = server_addr
-        self.server_node = sim.node(server_addr)
-        self.pool = ClientPool(
-            clients, unhealthy_after=self.cfg.unhealthy_after_failures,
-            readmit_after=self.cfg.readmit_after_rounds)
-        self.global_params = global_params
-        codec = make_codec(self.cfg.transport.codec,
-                           **self.cfg.transport.codec_kwargs)
-        self.packetizer = Packetizer(codec=codec, mtu=self.cfg.transport.mtu)
-        self.history: list[RoundResult] = []
-        self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
+        self.core = ServerCore(sim, server_addr, clients, global_params,
+                               self.cfg)
+        self.scheduler = make_scheduler(self.cfg.mode, self.core)
 
-        # Transport dispatch goes through the registry: FederatedSystem has
-        # no per-protocol branches, so new transports plug in unchanged.
-        self.transport: Transport = make_transport(self.cfg.transport.kind)
-
-        # Persistent receivers.
-        self._server_rx = self.transport.create_receiver(
-            sim, self.server_node, self.cfg.transport,
-            self._on_server_delivery)
-        self._client_rx: dict[str, object] = {}
-        for c in clients:
-            self._install_client_rx(c)
-
-        # Per-round state.
-        self._round_idx = -1
-        self._roster: dict[str, FLClient] = {}
-        self._resolved: set[str] = set()
-        self._updates: dict[str, np.ndarray] = {}   # addr -> flat vector
-        self._late_buffer: list[tuple[int, str, np.ndarray]] = []
-        self._round_open = False
-        self._round_start_ns = 0
-        self._deadline_timer = None
-        self._failed: list[str] = []
-        self._round_retx = 0
-        self._late_folded = 0
-
-    # -- receiver plumbing ---------------------------------------------------
-    def _install_client_rx(self, client: FLClient) -> None:
-        self._client_rx[client.addr] = self.transport.create_receiver(
-            self.sim, self.sim.node(client.addr), self.cfg.transport,
-            self._make_client_deliver(client))
-
-    def add_client(self, client: FLClient) -> None:
-        """Elastic join (between rounds)."""
-        self.pool.add(client)
-        self._install_client_rx(client)
-
-    def remove_client(self, addr: str) -> None:
-        self.pool.remove(addr)
-
-    # -- txn numbering ------------------------------------------------------
-    @staticmethod
-    def _txn_down(round_idx: int) -> int:
-        return round_idx * 2
-
-    @staticmethod
-    def _txn_up(round_idx: int) -> int:
-        return round_idx * 2 + 1
-
-    @staticmethod
-    def _round_of_txn(txn: int) -> int:
-        return txn // 2
-
-    # -- round driver ---------------------------------------------------------
+    # -- the stable surface ---------------------------------------------------
     def run_round(self, round_idx: Optional[int] = None) -> RoundResult:
-        self._round_idx = (self._round_idx + 1 if round_idx is None
-                           else round_idx)
-        r = self._round_idx
-        roster = self._sample_participants(self.pool.active(r), r)
-        self._roster = {c.addr: c for c in roster}
-        self._resolved = set()
-        self._updates = {}
-        self._failed = []
-        self._round_open = True
-        self._round_retx = 0
-        self._late_folded = 0
-        self._round_start_ns = self.sim.now_ns
-        stats0 = dict(self.sim.stats)
-
-        if self.cfg.round_deadline_ns is not None:
-            self._deadline_timer = self.sim.schedule(
-                self.cfg.round_deadline_ns, self._on_deadline)
-
-        for client in roster:
-            if self.cfg.broadcast_model:
-                self._broadcast_to(client)
-            else:
-                client.params = self.global_params
-                self._schedule_training(client)
-
-        self.sim.run()
-
-        if self._round_open:       # e.g. every client failed before deadline
-            self._finalize()
-
-        stats1 = self.sim.stats
-        result = RoundResult(
-            round_idx=r,
-            duration_ns=self.sim.now_ns - self._round_start_ns,
-            arrived=sorted(self._updates.keys()),
-            failed=list(self._failed),
-            skipped_unhealthy=self.pool.benched(r),
-            late_folded=self._late_folded,
-            bytes_sent=stats1["bytes_sent"] - stats0["bytes_sent"],
-            packets_sent=stats1["packets_sent"] - stats0["packets_sent"],
-            packets_dropped=(stats1["packets_dropped"]
-                             - stats0["packets_dropped"]),
-            retransmissions=self._round_retx,
-            roster=sorted(self._roster),
-            data_packets=(stats1.get("sent_data", 0)
-                          - stats0.get("sent_data", 0)),
-            nack_packets=(stats1.get("sent_nack", 0)
-                          - stats0.get("sent_nack", 0)),
-            parity_packets=(stats1.get("sent_parity", 0)
-                            - stats0.get("sent_parity", 0)),
-        )
-        self.history.append(result)
-        if self.on_round_end is not None:
-            self.on_round_end(result, self.global_params)
-        return result
+        return self.scheduler.run_round(round_idx)
 
     def run_rounds(self, n: int) -> list[RoundResult]:
-        return [self.run_round() for _ in range(n)]
+        return self.scheduler.run_rounds(n)
 
-    # -- per-round client sampling (partial participation) -------------------
-    def _sample_participants(self, active: list[FLClient],
-                             round_idx: int) -> list[FLClient]:
-        f = self.cfg.participation_fraction
-        if f >= 1.0 or len(active) <= 1:
-            return list(active)
-        k = max(self.cfg.min_participants, int(round(f * len(active))))
-        k = min(k, len(active))
-        # Partial Fisher-Yates over indices, driven only by Random.random()
-        # (the one generator method with a cross-version stability guarantee),
-        # keyed by integers so PYTHONHASHSEED cannot perturb the draw.
-        rng = random.Random(hash((self.cfg.participation_seed, round_idx)))
-        idx = list(range(len(active)))
-        for j in range(k):
-            pick = j + int(rng.random() * (len(idx) - j))
-            idx[j], idx[pick] = idx[pick], idx[j]
-        return [active[i] for i in sorted(idx[:k])]
+    def add_client(self, client: FLClient) -> None:
+        """Elastic join (between rounds under sync; any time under async)."""
+        self.core.pool.add(client)
+        self.core.install_client_rx(client)
+        self.scheduler.on_client_added(client)
 
-    # -- downlink: server -> client -------------------------------------------
-    def _broadcast_to(self, client: FLClient) -> None:
-        packets = self.packetizer.to_packets(
-            self.global_params, self.server_addr, self._txn_down(self._round_idx))
-        self._make_sender(self.server_node, self.sim.node(client.addr),
-                          packets,
-                          on_fail=lambda s, a=client.addr:
-                          self._uplink_failed(a)).start()
+    def remove_client(self, addr: str) -> None:
+        self.core.pool.remove(addr)
 
-    def _make_client_deliver(self, client: FLClient):
-        def _cb(d: Delivery) -> None:
-            if self._round_of_txn(d.txn) != self._round_idx:
-                return
-            if d.complete:
-                client.params = self.packetizer.from_packets(
-                    d.packets, self.global_params)
-            else:
-                # Best-effort downlink: the client trains on the zero-filled
-                # model (Delivery.complete makes the gap explicit instead of
-                # silently treating a partial broadcast as the full model).
-                vec = self._decode_vec(d.reassemble())
-                client.params = unflatten_from_vector(vec, self.global_params)
-            self._schedule_training(client)
-        return _cb
+    # -- state owned by the core, surfaced here for compatibility ------------
+    @property
+    def global_params(self) -> Any:
+        return self.core.global_params
 
-    # -- local training ------------------------------------------------------
-    def _schedule_training(self, client: FLClient) -> None:
-        def _train_done() -> None:
-            received = client.params
-            new_params, metrics = client.train_fn(
-                received, self._round_idx, client)
-            client.metrics_history.append(metrics)
-            payload_tree = (agg.tree_sub(new_params, received)
-                            if self.cfg.send_deltas else new_params)
-            client.params = new_params
-            self._send_update(client, payload_tree)
-        self.sim.schedule(client.train_time_ns, _train_done)
+    @global_params.setter
+    def global_params(self, value: Any) -> None:
+        self.core.global_params = value
 
-    # -- uplink: client -> server -------------------------------------------
-    def _send_update(self, client: FLClient, payload_tree: Any) -> None:
-        vec = flatten_to_vector(payload_tree)
-        if self.cfg.error_feedback and not self.packetizer.codec.lossless:
-            comp = client.error_feedback.compensate(vec)
-            data = self.packetizer.codec.encode(comp)
-            decoded = self.packetizer.codec.decode(data)
-            client.error_feedback.update(comp, decoded)
-        else:
-            data = self.packetizer.codec.encode(vec)
-        packets = packetize(data, client.addr,
-                            self._txn_up(self._round_idx),
-                            self.packetizer.mtu)
-        node = self.sim.node(client.addr)
-        self._make_sender(
-            node, self.server_node, packets,
-            on_fail=lambda s, a=client.addr: self._uplink_failed(a)).start()
+    @property
+    def pool(self) -> ClientPool:
+        return self.core.pool
 
-    def _make_sender(self, src, dst, packets, on_fail=None):
-        def _fail(sender) -> None:
-            self._note_retx(sender)
-            if on_fail is not None:
-                on_fail(sender)
-        return self.transport.create_sender(
-            self.sim, src, dst, packets, self.cfg.transport,
-            on_complete=self._note_retx, on_fail=_fail)
+    @property
+    def history(self) -> list[RoundResult]:
+        return self.core.history
 
-    def _note_retx(self, sender) -> None:
-        self._round_retx += getattr(sender.stats, "retransmissions", 0)
+    @property
+    def on_round_end(self) -> Optional[Callable[[RoundResult, Any], None]]:
+        return self.core.on_round_end
 
-    # -- server-side delivery --------------------------------------------------
-    def _on_server_delivery(self, d: Delivery) -> None:
-        if not d.complete and not self.transport.caps.partial_delivery:
-            return  # a reliable transport never hands over a partial payload
-        self._ingest_update(d.sender_addr, d.txn, d.reassemble())
+    @on_round_end.setter
+    def on_round_end(self,
+                     cb: Optional[Callable[[RoundResult, Any], None]]) -> None:
+        self.core.on_round_end = cb
 
-    def _decode_vec(self, data: bytes) -> np.ndarray:
-        """Decode a (possibly zero-filled) byte stream to a model-sized
-        vector; undecodable or mis-sized payloads degrade to zeros, the
-        capability-driven path for partial deliveries."""
-        n_expected = flatten_to_vector(self.global_params).size
-        try:
-            vec = self.packetizer.codec.decode(data)
-        except Exception:
-            vec = np.zeros(n_expected, dtype=np.float32)
-        if vec.size < n_expected:
-            vec = np.concatenate(
-                [vec, np.zeros(n_expected - vec.size, dtype=np.float32)])
-        return vec[:n_expected]
+    @property
+    def transport(self):
+        return self.core.transport
 
-    def _ingest_update(self, sender_addr: str, txn: int, data: bytes) -> None:
-        vec = self._decode_vec(data)
-        upd_round = self._round_of_txn(txn)
-        if upd_round != self._round_idx or not self._round_open:
-            # Straggler from a previous round: fold next round, discounted.
-            self._late_buffer.append((upd_round, sender_addr, vec))
-            return
-        self._updates[sender_addr] = vec
-        self.pool.record_success(sender_addr)
-        self._mark_resolved(sender_addr)
+    @property
+    def packetizer(self):
+        return self.core.packetizer
 
-    def _uplink_failed(self, addr: str) -> None:
-        if addr in self._roster and addr not in self._resolved:
-            self._failed.append(addr)
-            self.pool.record_failure(addr, self._round_idx)
-            self._mark_resolved(addr)
-
-    def _mark_resolved(self, addr: str) -> None:
-        self._resolved.add(addr)
-        if self._round_open and self._resolved >= set(self._roster):
-            self._finalize()
-
-    def _on_deadline(self) -> None:
-        if self._round_open:
-            self.sim.log(f"t={self.sim.now_ns}ns SERVER round "
-                         f"{self._round_idx} deadline -> straggler cutoff "
-                         f"({len(self._updates)}/{len(self._roster)} arrived)")
-            self._finalize()
-
-    # -- aggregation -----------------------------------------------------------
-    def _finalize(self) -> None:
-        self._round_open = False
-        if self._deadline_timer is not None:
-            self._deadline_timer.cancel()
-            self._deadline_timer = None
-
-        self._late_folded = 0
-        contribs: list[tuple[np.ndarray, float]] = []
-        for addr, vec in self._updates.items():
-            contribs.append((vec, self._roster[addr].weight))
-        for upd_round, addr, vec in self._late_buffer:
-            age = max(1, self._round_idx - upd_round)
-            w = (self.cfg.staleness_discount ** age)
-            client = self.pool.clients.get(addr)
-            contribs.append((vec, w * (client.weight if client else 1.0)))
-            self._late_folded += 1
-        self._late_buffer = []
-        if not contribs:
-            return
-
-        template = self.global_params
-        if self.cfg.send_deltas:
-            vecs = [v for v, _ in contribs]
-            ws = np.asarray([w for _, w in contribs], dtype=np.float32)
-            mean_delta = sum(w * v for v, w in zip(vecs, ws)) / ws.sum()
-            delta_tree = unflatten_from_vector(
-                mean_delta.astype(np.float32), template)
-            self.global_params = agg.apply_delta(
-                template, delta_tree, self.cfg.server_lr)
-            return
-
-        trees = [unflatten_from_vector(v, template) for v, _ in contribs]
-        weights = [w for _, w in contribs]
-        if self.cfg.aggregation == "pairwise":
-            # Paper Eq. 1: fold per arrival order.
-            g = self.global_params
-            for t in trees:
-                g = agg.pairwise_average(g, t)
-            self.global_params = g
-        elif self.cfg.aggregation == "fedavg":
-            self.global_params = agg.fedavg(trees, weights)
-        elif self.cfg.aggregation == "trimmed_mean":
-            self.global_params = agg.trimmed_mean(trees)
-        else:
-            raise ValueError(f"unknown aggregation {self.cfg.aggregation}")
+    @property
+    def server_node(self):
+        return self.core.server_node

@@ -1,0 +1,541 @@
+"""Event-driven FL server core: per-client sessions over one Simulator.
+
+The paper's Fig. 4 round is a *lockstep loop*: broadcast, wait for every
+client, aggregate, repeat.  This module dissolves that loop into its event
+structure so scheduling becomes a policy choice (``repro.core.scheduling``)
+instead of control flow:
+
+* :class:`ClientSession` — one client's traversal of the
+  broadcast -> train -> uplink -> ingest pipeline, with its own transaction
+  numbers.  Sessions from different (virtual) rounds overlap freely in
+  flight; every transport tolerates that because receivers key state by
+  ``(sender addr, txn)`` (``TransportCaps.concurrent_txns``).
+* :class:`ServerCore` — the mechanics shared by every scheduling policy:
+  transport dispatch, packetizing, downlink/uplink senders, decode +
+  zero-fill, the late-update staleness buffer, health tracking, and the
+  aggregation math.  The core raises *events* (uplink ingested, session
+  failed, downlink delivered) into whatever scheduler is bound to it; it
+  never decides when a round starts or ends.
+
+``repro.core.rounds.FederatedSystem`` is the stable facade over
+(core, scheduler); ``mode="sync"`` reproduces the pre-refactor round loop
+bit-for-bit (pinned by ``tests/test_orchestrator_equivalence.py``),
+``mode="async"`` runs FedBuff-style overlapping rounds
+(see ``docs/ASYNC.md``).
+
+Configuration (:class:`FLConfig`), per-round accounting
+(:class:`RoundResult`), the client object (:class:`FLClient`) and the
+elastic health pool (:class:`ClientPool`) live here too — ``rounds``
+re-exports them so existing imports keep working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.compression import ErrorFeedback, make_codec
+from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
+                                   unflatten_from_vector)
+from repro.core.simulator import Simulator
+from repro.core.transport import (Delivery, Transport, TransportConfig,
+                                  make_transport, validate_transport_kind)
+
+
+def _scheduler_registry() -> dict:
+    """The one source of truth for scheduling modes.
+
+    Imported lazily: ``repro.core.scheduling`` defines the policies and
+    imports this module for the core types, so a top-level import here
+    would be circular.  By construction time of any ``FLConfig`` the
+    import graph is settled and the registry is populated.
+    """
+    from repro.core.scheduling import SCHEDULERS
+    return SCHEDULERS
+
+
+# --------------------------------------------------------------------------
+# Configuration (TransportConfig lives with the transport registry and is
+# re-exported from repro.core.rounds for backward compatibility)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class FLConfig:
+    transport: TransportConfig = dataclasses.field(
+        default_factory=TransportConfig)
+    aggregation: str = "fedavg"          # pairwise (paper Eq.1) | fedavg | trimmed_mean
+    # fedavg implementation: numpy (default, digest-stable) | kernel
+    # (Pallas fedavg_trees; needs jax) | auto (kernel when importable).
+    aggregation_backend: str = "numpy"
+    send_deltas: bool = False            # ship (trained - received) instead of weights
+    error_feedback: bool = False         # residual compensation for lossy codecs
+    broadcast_model: bool = True         # server->client downlink each round
+    round_deadline_ns: Optional[int] = None
+    server_lr: float = 1.0               # for delta aggregation
+    staleness_discount: float = 0.5      # late update weight *= discount^age
+    # discount**age underflows for large ages; the factor is clamped to
+    # this floor so a straggler's update is discounted, never silently
+    # dropped.  Clamp events surface as RoundResult.staleness_clamped.
+    staleness_floor: float = 1e-6
+    unhealthy_after_failures: int = 2
+    readmit_after_rounds: int = 2
+    # Partial participation (fleet-scale): each round samples
+    # round(participation_fraction * |active|) clients, at least
+    # min_participants, via a seeded Fisher-Yates draw keyed by
+    # (participation_seed, round_idx) — deterministic across Python versions
+    # because it only consumes Random.random().  Sync mode only: async
+    # participation emerges from per-client cadence + health instead.
+    participation_fraction: float = 1.0
+    min_participants: int = 1
+    participation_seed: int = 0
+    # Scheduling policy: "sync" is the paper's round barrier (bit-compatible
+    # with the pre-refactor loop); "async" is the FedBuff-style buffered
+    # asynchronous server (docs/ASYNC.md).
+    mode: str = "sync"
+    # Async only: aggregate whenever this many updates are buffered.
+    buffer_k: int = 8
+    # Async only: drop updates staler than this many aggregations (None =
+    # keep everything, discounted).  Dropped counts surface in
+    # RoundResult.metrics["stale_dropped"].
+    max_staleness: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        # Fail at construction time (with the registered names) rather than
+        # deep inside receiver setup; also covers dataclasses.replace(...).
+        validate_transport_kind(self.transport.kind)
+        if self.mode not in _scheduler_registry():
+            raise ValueError(f"unknown mode {self.mode!r}; one of "
+                             f"{sorted(_scheduler_registry())}")
+        if self.buffer_k < 1:
+            raise ValueError("buffer_k must be >= 1")
+        if self.aggregation_backend not in agg.FEDAVG_BACKENDS:
+            raise ValueError(
+                f"unknown aggregation_backend {self.aggregation_backend!r}; "
+                f"one of {agg.FEDAVG_BACKENDS}")
+
+
+@dataclasses.dataclass
+class RoundResult:
+    """One aggregation event.  Sync: one barrier round.  Async: one buffer
+    flush (round_idx counts aggregations; roster is everyone who was in
+    flight during the window)."""
+
+    round_idx: int
+    duration_ns: int
+    arrived: list[str]
+    failed: list[str]
+    skipped_unhealthy: list[str]
+    late_folded: int
+    bytes_sent: int
+    packets_sent: int
+    packets_dropped: int
+    retransmissions: int
+    metrics: dict = dataclasses.field(default_factory=dict)
+    roster: list[str] = dataclasses.field(default_factory=list)
+    # Per-kind traffic split (from the simulator's per-PacketKind counters)
+    # so benchmarks separate payload from protocol chatter.
+    data_packets: int = 0
+    nack_packets: int = 0
+    parity_packets: int = 0
+    # How many contributions had their staleness factor clamped to
+    # FLConfig.staleness_floor (discount**age underflow guard).
+    staleness_clamped: int = 0
+
+
+# --------------------------------------------------------------------------
+# Client
+# --------------------------------------------------------------------------
+class FLClient:
+    """One federated client.
+
+    ``train_fn(params, round_idx, client) -> (new_params, metrics)`` runs real
+    (JAX) local training; ``train_time_ns`` models how long that takes inside
+    the simulation (heterogeneous values create stragglers); ``cadence_ns``
+    is the async re-entry gap — how long the device stays unavailable after
+    finishing an upload before it asks for fresh work (ignored by sync
+    scheduling, where the round barrier sets the cadence).
+    """
+
+    def __init__(self, addr: str, train_fn: Callable, *,
+                 train_time_ns: int = 1_000_000_000,
+                 weight: float = 1.0,
+                 cadence_ns: int = 0):
+        self.addr = addr
+        self.train_fn = train_fn
+        self.train_time_ns = train_time_ns
+        self.weight = weight
+        self.cadence_ns = cadence_ns
+        self.params: Any = None          # local copy of the global model
+        self.error_feedback = ErrorFeedback()
+        self.metrics_history: list[dict] = []
+
+
+class ClientPool:
+    """Elastic membership with health tracking.  ``round_idx`` is the sync
+    round counter or the async aggregation counter — benching and
+    re-admission are measured in whichever unit the scheduler advances."""
+
+    def __init__(self, clients: list[FLClient], *,
+                 unhealthy_after: int = 2, readmit_after: int = 2):
+        self.clients: dict[str, FLClient] = {c.addr: c for c in clients}
+        self.failures: dict[str, int] = {c.addr: 0 for c in clients}
+        self.benched_until: dict[str, int] = {}
+        self.unhealthy_after = unhealthy_after
+        self.readmit_after = readmit_after
+
+    def add(self, client: FLClient) -> None:
+        self.clients[client.addr] = client
+        self.failures[client.addr] = 0
+
+    def remove(self, addr: str) -> None:
+        self.clients.pop(addr, None)
+        self.failures.pop(addr, None)
+        self.benched_until.pop(addr, None)
+
+    def active(self, round_idx: int) -> list[FLClient]:
+        out = []
+        for addr, c in self.clients.items():
+            if self.benched_until.get(addr, -1) > round_idx:
+                continue
+            out.append(c)
+        return out
+
+    def is_active(self, addr: str, round_idx: int) -> bool:
+        return (addr in self.clients
+                and self.benched_until.get(addr, -1) <= round_idx)
+
+    def benched(self, round_idx: int) -> list[str]:
+        return [a for a, r in self.benched_until.items() if r > round_idx]
+
+    def record_failure(self, addr: str, round_idx: int) -> None:
+        self.failures[addr] = self.failures.get(addr, 0) + 1
+        if self.failures[addr] >= self.unhealthy_after:
+            self.benched_until[addr] = round_idx + 1 + self.readmit_after
+            self.failures[addr] = 0
+
+    def record_success(self, addr: str) -> None:
+        self.failures[addr] = 0
+
+
+# --------------------------------------------------------------------------
+# Sessions
+# --------------------------------------------------------------------------
+# Session lifecycle.  DOWNLINK -> TRAINING -> UPLINK -> ARRIVED is the happy
+# path; FAILED (transport retry exhaustion) and TIMEOUT (async session
+# watchdog) are terminal on the session but not on the client.
+PENDING = "pending"
+DOWNLINK = "downlink"
+TRAINING = "training"
+UPLINK = "uplink"
+ARRIVED = "arrived"
+FAILED = "failed"
+TIMEOUT = "timeout"
+
+
+@dataclasses.dataclass
+class ClientSession:
+    """One client's pass through broadcast -> train -> uplink -> ingest.
+
+    ``round_idx`` is the *virtual* round this session belongs to (the loop
+    index under sync scheduling; the client's own session count under
+    async).  ``model_version`` is the server's aggregation counter at
+    downlink time — async staleness is the version distance at ingest.
+    Transaction numbering is session-scoped: the scheduler assigns
+    ``txn_down``/``txn_up`` (sync reuses the round-derived pair so wire
+    traffic is byte-identical to the pre-refactor loop; async draws a fresh
+    pair per session so overlapping sessions never collide).
+    """
+
+    client: FLClient
+    round_idx: int
+    txn_down: int
+    txn_up: int
+    model_version: int = 0
+    state: str = PENDING
+    started_ns: int = 0
+
+    @property
+    def addr(self) -> str:
+        return self.client.addr
+
+
+# --------------------------------------------------------------------------
+# The server core
+# --------------------------------------------------------------------------
+class ServerCore:
+    """Transport + packetizing + ingest + aggregation mechanics, policy-free.
+
+    A scheduler (``repro.core.scheduling``) is bound after construction and
+    receives the events; the core never starts rounds, samples rosters, or
+    decides when to aggregate.
+    """
+
+    def __init__(self, sim: Simulator, server_addr: str,
+                 clients: list[FLClient], global_params: Any,
+                 cfg: FLConfig):
+        self.sim = sim
+        self.cfg = cfg
+        self.server_addr = server_addr
+        self.server_node = sim.node(server_addr)
+        self.pool = ClientPool(
+            clients, unhealthy_after=cfg.unhealthy_after_failures,
+            readmit_after=cfg.readmit_after_rounds)
+        self.global_params = global_params
+        codec = make_codec(cfg.transport.codec, **cfg.transport.codec_kwargs)
+        self.packetizer = Packetizer(codec=codec, mtu=cfg.transport.mtu)
+        self.history: list[RoundResult] = []
+        self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
+
+        # Transport dispatch goes through the registry: the core has no
+        # per-protocol branches, so new transports plug in unchanged.
+        self.transport: Transport = make_transport(cfg.transport.kind)
+
+        # Persistent receivers.
+        self._server_rx = self.transport.create_receiver(
+            sim, self.server_node, cfg.transport, self._on_server_delivery)
+        self._client_rx: dict[str, object] = {}
+        for c in clients:
+            self.install_client_rx(c)
+
+        self.scheduler = None            # bound by FederatedSystem
+        # Session registries: uplink keyed by (client addr, txn_up) — the
+        # server-side delivery identity — and downlink by (client addr,
+        # txn_down) — the client-receiver identity.  Sync scheduling reuses
+        # one (txn_down, txn_up) pair across a whole round, so values may be
+        # shared; the addr component keeps lookups unambiguous.
+        self._sessions_up: dict[tuple[str, int], ClientSession] = {}
+        self._sessions_down: dict[tuple[str, int], ClientSession] = {}
+        self._txn_counter = 0
+        # Stragglers from closed sync rounds: (virtual round, addr, vec).
+        self.late_buffer: list[tuple[int, str, np.ndarray]] = []
+        # Monotonic retransmission counter (sender stats folded in on
+        # completion or failure); schedulers snapshot + delta per window.
+        self.retx_total = 0
+
+    def bind(self, scheduler) -> None:
+        self.scheduler = scheduler
+
+    # -- receiver plumbing ---------------------------------------------------
+    def install_client_rx(self, client: FLClient) -> None:
+        self._client_rx[client.addr] = self.transport.create_receiver(
+            self.sim, self.sim.node(client.addr), self.cfg.transport,
+            self._make_client_deliver(client))
+
+    # -- session management --------------------------------------------------
+    def new_txn_pair(self) -> tuple[int, int]:
+        """A fresh session-scoped (txn_down, txn_up) pair.  Starts above any
+        round-scoped numbering so a mode switch can never collide."""
+        sid = self._txn_counter
+        self._txn_counter += 1
+        return 2 * sid, 2 * sid + 1
+
+    def reserve_txns(self, txn: int) -> None:
+        """Keep session-scoped numbering above ``txn`` (sync rounds use
+        round-derived pairs; async continues past them)."""
+        self._txn_counter = max(self._txn_counter, txn // 2 + 1)
+
+    def open_session(self, client: FLClient, round_idx: int,
+                     txn_down: int, txn_up: int,
+                     model_version: int = 0) -> ClientSession:
+        s = ClientSession(client, round_idx, txn_down, txn_up,
+                          model_version=model_version,
+                          started_ns=self.sim.now_ns)
+        self._sessions_down[(client.addr, txn_down)] = s
+        self._sessions_up[(client.addr, txn_up)] = s
+        self.reserve_txns(max(txn_down, txn_up))
+        return s
+
+    def clear_sessions(self) -> None:
+        """Drop every session registration (sync: called at round start so
+        stale traffic from a finished round can no longer match)."""
+        self._sessions_up.clear()
+        self._sessions_down.clear()
+
+    def drop_session(self, session: ClientSession) -> None:
+        self._sessions_down.pop((session.addr, session.txn_down), None)
+        self._sessions_up.pop((session.addr, session.txn_up), None)
+
+    def uplink_session(self, addr: str, txn: int) -> Optional[ClientSession]:
+        return self._sessions_up.get((addr, txn))
+
+    # -- downlink: server -> client -------------------------------------------
+    def begin_downlink(self, session: ClientSession) -> None:
+        """Broadcast the current global model to the session's client."""
+        session.state = DOWNLINK
+        packets = self.packetizer.to_packets(
+            self.global_params, self.server_addr, session.txn_down)
+        self._make_sender(self.server_node,
+                          self.sim.node(session.addr), packets,
+                          session).start()
+
+    def begin_local(self, session: ClientSession) -> None:
+        """Skip the downlink (broadcast_model=False): hand the client the
+        global model by reference and schedule training."""
+        session.client.params = self.global_params
+        self.schedule_training(session)
+
+    def _make_client_deliver(self, client: FLClient):
+        def _cb(d: Delivery) -> None:
+            session = self._sessions_down.get((client.addr, d.txn))
+            if session is None or not self.scheduler.accept_downlink(session):
+                return
+            if d.complete:
+                client.params = self.packetizer.from_packets(
+                    d.packets, self.global_params)
+            else:
+                # Best-effort downlink: the client trains on the zero-filled
+                # model (Delivery.complete makes the gap explicit instead of
+                # silently treating a partial broadcast as the full model).
+                vec = self.decode_vec(d.reassemble())
+                client.params = unflatten_from_vector(vec, self.global_params)
+            self.schedule_training(session)
+        return _cb
+
+    # -- local training ------------------------------------------------------
+    def schedule_training(self, session: ClientSession) -> None:
+        session.state = TRAINING
+        client = session.client
+
+        def _train_done() -> None:
+            received = client.params
+            new_params, metrics = client.train_fn(
+                received, session.round_idx, client)
+            client.metrics_history.append(metrics)
+            payload_tree = (agg.tree_sub(new_params, received)
+                            if self.cfg.send_deltas else new_params)
+            client.params = new_params
+            self.send_update(session, payload_tree)
+        self.sim.schedule(client.train_time_ns, _train_done)
+
+    # -- uplink: client -> server -------------------------------------------
+    def send_update(self, session: ClientSession, payload_tree: Any) -> None:
+        session.state = UPLINK
+        client = session.client
+        vec = flatten_to_vector(payload_tree)
+        if self.cfg.error_feedback and not self.packetizer.codec.lossless:
+            comp = client.error_feedback.compensate(vec)
+            data = self.packetizer.codec.encode(comp)
+            decoded = self.packetizer.codec.decode(data)
+            client.error_feedback.update(comp, decoded)
+        else:
+            data = self.packetizer.codec.encode(vec)
+        packets = packetize(data, client.addr, session.txn_up,
+                            self.packetizer.mtu)
+        node = self.sim.node(client.addr)
+        self._make_sender(node, self.server_node, packets, session).start()
+
+    def _make_sender(self, src, dst, packets, session: ClientSession):
+        def _fail(sender) -> None:
+            self._note_retx(sender)
+            self.scheduler.on_session_failed(session)
+        return self.transport.create_sender(
+            self.sim, src, dst, packets, self.cfg.transport,
+            on_complete=self._note_retx, on_fail=_fail)
+
+    def _note_retx(self, sender) -> None:
+        self.retx_total += getattr(sender.stats, "retransmissions", 0)
+
+    # -- server-side delivery --------------------------------------------------
+    def _on_server_delivery(self, d: Delivery) -> None:
+        if not d.complete and not self.transport.caps.partial_delivery:
+            return  # a reliable transport never hands over a partial payload
+        vec = self.decode_vec(d.reassemble())
+        session = self.uplink_session(d.sender_addr, d.txn)
+        self.scheduler.on_uplink(session, d.sender_addr, d.txn, vec)
+
+    def decode_vec(self, data: bytes) -> np.ndarray:
+        """Decode a (possibly zero-filled) byte stream to a model-sized
+        vector; undecodable or mis-sized payloads degrade to zeros, the
+        capability-driven path for partial deliveries."""
+        n_expected = flatten_to_vector(self.global_params).size
+        try:
+            vec = self.packetizer.codec.decode(data)
+        except Exception:
+            vec = np.zeros(n_expected, dtype=np.float32)
+        if vec.size < n_expected:
+            vec = np.concatenate(
+                [vec, np.zeros(n_expected - vec.size, dtype=np.float32)])
+        return vec[:n_expected]
+
+    # -- staleness -----------------------------------------------------------
+    def staleness_factor(self, age: int) -> tuple[float, bool]:
+        """``discount**age`` clamped to ``staleness_floor``: a stale update
+        is discounted, never silently zeroed out.  Returns (factor,
+        clamped?)."""
+        factor = self.cfg.staleness_discount ** age
+        if factor < self.cfg.staleness_floor:
+            return self.cfg.staleness_floor, True
+        return factor, False
+
+    def fold_late_buffer(self, current_round: int,
+                         contribs: list) -> tuple[int, int]:
+        """Append the late-update buffer to ``contribs`` with
+        staleness-discounted weights; returns (folded, clamped) counts."""
+        folded = clamped = 0
+        for upd_round, addr, vec in self.late_buffer:
+            age = max(1, current_round - upd_round)
+            w, was_clamped = self.staleness_factor(age)
+            client = self.pool.clients.get(addr)
+            contribs.append((vec, w * (client.weight if client else 1.0)))
+            folded += 1
+            clamped += was_clamped
+        self.late_buffer = []
+        return folded, clamped
+
+    # -- aggregation -----------------------------------------------------------
+    def apply_aggregation(self, contribs: list) -> None:
+        """Fold ``[(flat vector, weight), ...]`` into the global model —
+        the exact pre-refactor math, shared by every scheduling policy."""
+        if not contribs:
+            return
+        template = self.global_params
+        if self.cfg.send_deltas:
+            vecs = [v for v, _ in contribs]
+            ws = np.asarray([w for _, w in contribs], dtype=np.float32)
+            mean_delta = sum(w * v for v, w in zip(vecs, ws)) / ws.sum()
+            delta_tree = unflatten_from_vector(
+                mean_delta.astype(np.float32), template)
+            self.global_params = agg.apply_delta(
+                template, delta_tree, self.cfg.server_lr)
+            return
+
+        trees = [unflatten_from_vector(v, template) for v, _ in contribs]
+        weights = [w for _, w in contribs]
+        if self.cfg.aggregation == "pairwise":
+            # Paper Eq. 1: fold per arrival order.
+            g = self.global_params
+            for t in trees:
+                g = agg.pairwise_average(g, t)
+            self.global_params = g
+        elif self.cfg.aggregation == "fedavg":
+            self.global_params = agg.fedavg(
+                trees, weights, backend=self.cfg.aggregation_backend)
+        elif self.cfg.aggregation == "trimmed_mean":
+            self.global_params = agg.trimmed_mean(trees)
+        else:
+            raise ValueError(f"unknown aggregation {self.cfg.aggregation}")
+
+    # -- result plumbing -------------------------------------------------------
+    def snapshot_stats(self) -> dict:
+        return dict(self.sim.stats)
+
+    def stats_delta(self, stats0: dict) -> dict:
+        s1 = self.sim.stats
+        return {
+            "bytes_sent": s1["bytes_sent"] - stats0["bytes_sent"],
+            "packets_sent": s1["packets_sent"] - stats0["packets_sent"],
+            "packets_dropped": (s1["packets_dropped"]
+                                - stats0["packets_dropped"]),
+            "data_packets": s1.get("sent_data", 0) - stats0.get("sent_data", 0),
+            "nack_packets": s1.get("sent_nack", 0) - stats0.get("sent_nack", 0),
+            "parity_packets": (s1.get("sent_parity", 0)
+                               - stats0.get("sent_parity", 0)),
+        }
+
+    def emit_result(self, result: RoundResult) -> RoundResult:
+        self.history.append(result)
+        if self.on_round_end is not None:
+            self.on_round_end(result, self.global_params)
+        return result

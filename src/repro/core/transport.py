@@ -81,6 +81,13 @@ class TransportCaps:
     partial_delivery: bool = False   # may deliver with complete=False
     has_handshake: bool = False      # pays a connection setup round-trip
     supports_fail_cb: bool = True    # invokes on_fail after retry exhaustion
+    # Multiple transactions may be in flight between one (src, dst) pair at
+    # once: sender/receiver state is keyed by (addr, txn), never by address
+    # alone.  Async (overlapping-round) scheduling requires this.  Opt-in
+    # (default False) so a transport written before the flag existed is
+    # refused by the async scheduler instead of silently corrupting
+    # per-address state under overlapping sessions.
+    concurrent_txns: bool = False
 
 
 DeliverFn = Callable[[Delivery], None]
@@ -203,7 +210,8 @@ class MudpTransport(Transport):
 
     name = "mudp"
     caps = TransportCaps(reliable=True, partial_delivery=False,
-                         has_handshake=False, supports_fail_cb=True)
+                         has_handshake=False, supports_fail_cb=True,
+                         concurrent_txns=True)
 
     def create_sender(self, sim, src, dst, packets, cfg, *,
                       on_complete=None, on_fail=None):
@@ -223,7 +231,8 @@ class UdpTransport(Transport):
 
     name = "udp"
     caps = TransportCaps(reliable=False, partial_delivery=True,
-                         has_handshake=False, supports_fail_cb=False)
+                         has_handshake=False, supports_fail_cb=False,
+                         concurrent_txns=True)
 
     def create_sender(self, sim, src, dst, packets, cfg, *,
                       on_complete=None, on_fail=None):
@@ -240,7 +249,8 @@ class TcpTransport(Transport):
 
     name = "tcp"
     caps = TransportCaps(reliable=True, partial_delivery=False,
-                         has_handshake=True, supports_fail_cb=True)
+                         has_handshake=True, supports_fail_cb=True,
+                         concurrent_txns=True)
 
     def create_sender(self, sim, src, dst, packets, cfg, *,
                       on_complete=None, on_fail=None):

@@ -1,0 +1,114 @@
+"""Parity pins between the numpy transport-layer math and the Pallas
+kernels whose docstrings claim to mirror it.
+
+* ``repro.core.aggregation.fedavg`` (numpy backend) vs
+  ``repro.kernels.fedavg.ops.fedavg_trees`` — the "optional backend" the
+  orchestrator can select via ``FLConfig.aggregation_backend``.  The two
+  agree to ~1 ULP (the kernel reduces over clients in one fused pass, so
+  exact bit-identity is NOT guaranteed — which is why numpy stays the
+  digest-stable default).
+* ``repro.core.compression.quantize_int8``/``dequantize_int8`` vs
+  ``repro.kernels.quantize.ref`` — the "kernel's oracle" comment, now
+  enforced: identical scales (bit-for-bit) and identical int8 codes on
+  shared random vectors.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import aggregation as agg                    # noqa: E402
+from repro.core.compression import (dequantize_int8,          # noqa: E402
+                                    quantize_int8)
+from repro.kernels.fedavg import ops as fedavg_ops            # noqa: E402
+from repro.kernels.quantize import ref as quantize_ref        # noqa: E402
+
+
+def _trees(rng, k, n):
+    return [{"w": rng.standard_normal(n).astype(np.float32),
+             "b": rng.standard_normal(7).astype(np.float32)}
+            for _ in range(k)]
+
+
+class TestFedavgBackendParity:
+    @pytest.mark.parametrize("k,n", [(2, 300), (3, 1024), (8, 4096),
+                                     (5, 16384 + 13)])
+    def test_kernel_mirrors_numpy(self, k, n):
+        rng = np.random.default_rng(k * 1000 + n)
+        trees = _trees(rng, k, n)
+        weights = (rng.random(k) * 2.0 + 0.1).tolist()
+        a = agg.fedavg(trees, weights, backend="numpy")
+        b = fedavg_ops.fedavg_trees(trees, weights)
+        for key in a:
+            np.testing.assert_allclose(a[key], np.asarray(b[key]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_uniform_weights_default(self):
+        rng = np.random.default_rng(0)
+        trees = _trees(rng, 4, 512)
+        a = agg.fedavg(trees, backend="numpy")
+        b = agg.fedavg(trees, backend="kernel")
+        for key in a:
+            np.testing.assert_allclose(a[key], np.asarray(b[key]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_backend_dispatch(self):
+        rng = np.random.default_rng(1)
+        trees = _trees(rng, 3, 256)
+        # auto == kernel whenever jax imports (it does in this test).
+        auto = agg.fedavg(trees, backend="auto")
+        kern = agg.fedavg(trees, backend="kernel")
+        for key in auto:
+            np.testing.assert_array_equal(np.asarray(auto[key]),
+                                          np.asarray(kern[key]))
+        with pytest.raises(ValueError, match="backend"):
+            agg.fedavg(trees, backend="gpu4000")
+
+    def test_orchestrator_accepts_kernel_backend(self):
+        from repro.core import FLConfig
+        cfg = FLConfig(aggregation_backend="auto")
+        assert cfg.aggregation_backend == "auto"
+        with pytest.raises(ValueError, match="aggregation_backend"):
+            FLConfig(aggregation_backend="nope")
+
+
+class TestQuantizeOracleParity:
+    """The compression docstring says quantize_int8 mirrors
+    repro.kernels.quantize.ref — pinned here on shared random vectors."""
+
+    @pytest.mark.parametrize("n,block", [(1024, 256), (4096, 1024),
+                                         (1000, 256), (37, 16)])
+    def test_quantize_matches_ref(self, n, block):
+        rng = np.random.default_rng(n * 7 + block)
+        vec = (rng.standard_normal(n) * 10).astype(np.float32)
+        q_np, scales_np = quantize_int8(vec, block=block)
+
+        nb = -(-n // block)
+        padded = np.zeros(nb * block, dtype=np.float32)
+        padded[:n] = vec
+        q_ref, scales_ref = quantize_ref.quantize_blockwise(
+            padded.reshape(nb, block))
+
+        np.testing.assert_array_equal(q_np.reshape(nb, block),
+                                      np.asarray(q_ref))
+        np.testing.assert_array_equal(scales_np, np.asarray(scales_ref))
+
+    def test_dequantize_matches_ref(self):
+        rng = np.random.default_rng(5)
+        n, block = 2048, 512
+        vec = (rng.standard_normal(n) * 3).astype(np.float32)
+        q, scales = quantize_int8(vec, block=block)
+        out_np = dequantize_int8(q, scales, n, block=block)
+        out_ref = np.asarray(quantize_ref.dequantize_blockwise(
+            np.asarray(q).reshape(-1, block), np.asarray(scales))).reshape(-1)
+        np.testing.assert_array_equal(out_np, out_ref[:n])
+
+    def test_roundtrip_error_bounded_by_scale(self):
+        rng = np.random.default_rng(6)
+        vec = (rng.standard_normal(513) * 4).astype(np.float32)
+        q, scales = quantize_int8(vec, block=128)
+        out = dequantize_int8(q, scales, vec.size, block=128)
+        err = np.abs(out - vec)
+        per_block_bound = np.repeat(scales, 128)[:vec.size] * 0.5 + 1e-7
+        assert np.all(err <= per_block_bound)
