@@ -13,7 +13,8 @@ import time
 
 from benchmarks import (aggregation, async_vs_sync, codecs, fl_convergence,
                         fleet_scale, kernels_bench, roofline, simcore,
-                        transport_comparison, transport_scenarios)
+                        transport_comparison, transport_scenarios,
+                        wire_bench)
 
 SUITES = {
     "simcore": simcore,
@@ -23,6 +24,7 @@ SUITES = {
     "async_vs_sync": async_vs_sync,
     "fl_convergence": fl_convergence,
     "codecs": codecs,
+    "wire": wire_bench,
     "aggregation": aggregation,
     "kernels": kernels_bench,
     "roofline": roofline,

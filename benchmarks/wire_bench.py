@@ -1,0 +1,177 @@
+"""Benchmark — wire-plane pipelines: encode/decode throughput and
+compression ratio per pipeline spec (``repro.core.wire``).
+
+For each spec: encode + self-describing decode of an N-param float32
+vector, reporting wall time per direction, MB/s against the *input* size,
+wire bytes per parameter, and max |reconstruction error| against the
+input (delta-domain specs run against a zero reference, so their decoded
+output stays elementwise comparable).
+
+Determinism check (``--check``): every spec is encoded twice through two
+independently constructed pipelines (fresh state each); the wire bytes
+must hash identically, and a header-only ``decode_payload`` must
+reproduce the out-of-band decode bit-for-bit.  CI runs this and uploads
+``BENCH_wire.json``.
+
+  PYTHONPATH=src python benchmarks/wire_bench.py --check --out BENCH_wire.json
+  PYTHONPATH=src python -m benchmarks.run --only wire
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.wire import decode_payload, parse_pipeline
+
+#: The spec matrix: the four legacy codecs as single-stage pipelines plus
+#: the compositions the FL layer actually ships.
+SPECS = (
+    "raw",
+    "hex",
+    "int8(1024)",
+    "topk(0.01)",
+    "delta|ef|int8(1024)",
+    "delta|ef|topk(0.01)|int8(1024)",
+    "topk(0.01)|int8(256)",
+)
+
+
+def _fresh_state(pipeline, vec):
+    state = pipeline.new_state()
+    if pipeline.caps.delta_domain:
+        pipeline.set_reference(state, np.zeros_like(vec))
+    return state
+
+
+def _bench_spec(spec: str, vec: np.ndarray, repeats: int) -> dict:
+    pipeline = parse_pipeline(spec)
+
+    # Reported bytes/ratio/error come from a dedicated ONE-SHOT encode on
+    # fresh state, so BENCH_wire.json is identical whatever --repeats is
+    # (an ef residual would otherwise make repeat N's payload differ).
+    data = pipeline.encode(vec, _fresh_state(pipeline, vec))
+    out, _ = decode_payload(data)
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        pipeline.encode(vec, _fresh_state(pipeline, vec))
+    enc_s = (time.perf_counter() - t0) / repeats
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        decode_payload(data)
+    dec_s = (time.perf_counter() - t0) / repeats
+
+    in_bytes = vec.size * 4
+    # Comparable for every spec: the zero delta reference makes the
+    # delta-domain output the input itself, so this column is exactly the
+    # quantization/sparsification error the benchmark exists to report.
+    err = float(np.abs(out - vec).max())
+    return {
+        "spec": pipeline.spec,
+        "caps": {
+            "lossless": pipeline.caps.lossless,
+            "stateful": pipeline.caps.stateful,
+            "delta_domain": pipeline.caps.delta_domain,
+            "est_ratio": pipeline.caps.est_ratio,
+        },
+        "n_params": int(vec.size),
+        "wire_bytes": len(data),
+        "bytes_per_param": len(data) / vec.size,
+        "measured_ratio": len(data) / in_bytes,
+        "encode_us": enc_s * 1e6,
+        "decode_us": dec_s * 1e6,
+        "encode_mb_s": in_bytes / enc_s / 1e6,
+        "decode_mb_s": in_bytes / dec_s / 1e6,
+        "max_abs_err": err,
+    }
+
+
+def _determinism_check(vec: np.ndarray) -> list[str]:
+    """Two independent pipeline constructions must produce identical wire
+    bytes, and the header-only decode must match the out-of-band decode
+    bit-for-bit.  Returns a list of failures (empty = deterministic)."""
+    failures = []
+    for spec in SPECS:
+        digests = []
+        for _ in range(2):
+            p = parse_pipeline(spec)
+            st = p.new_state()
+            if p.caps.delta_domain:
+                p.set_reference(st, np.zeros_like(vec))
+            data = p.encode(vec, st)
+            negotiated, _ = decode_payload(data)
+            oob = p.decode(data, p.new_state())
+            if negotiated.tobytes() != oob.tobytes():
+                failures.append(f"{spec}: header-only decode != out-of-band")
+            digests.append(hashlib.sha256(data).hexdigest())
+        if digests[0] != digests[1]:
+            failures.append(f"{spec}: wire bytes differ across constructions")
+    return failures
+
+
+def run(n_params: int, repeats: int) -> dict:
+    rng = np.random.default_rng(0)
+    vec = rng.standard_normal(n_params).astype(np.float32)
+    return {
+        "n_params": n_params,
+        "repeats": repeats,
+        "pipelines": [_bench_spec(s, vec, repeats) for s in SPECS],
+        "determinism_failures": _determinism_check(vec),
+    }
+
+
+def bench():
+    """benchmarks.run contract: yield (row, us_per_call, derived)."""
+    report = run(n_params=1_000_000, repeats=3)
+    rows = []
+    for p in report["pipelines"]:
+        rows.append((
+            f"wire/{p['spec']}",
+            p["encode_us"] + p["decode_us"],
+            f"bytes_per_param={p['bytes_per_param']:.3f}"
+            f";enc_mb_s={p['encode_mb_s']:.0f}"
+            f";dec_mb_s={p['decode_mb_s']:.0f}",
+        ))
+    status = ("ok" if not report["determinism_failures"]
+              else ";".join(report["determinism_failures"]))
+    rows.append(("wire/determinism", 0.0, status))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--params", type=int, default=1_000_000)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=None, help="write BENCH_wire.json here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if the determinism check fails")
+    args = ap.parse_args()
+
+    report = run(args.params, args.repeats)
+    for p in report["pipelines"]:
+        print(f"{p['spec']:34s} {p['bytes_per_param']:7.3f} B/param  "
+              f"enc {p['encode_mb_s']:8.0f} MB/s  "
+              f"dec {p['decode_mb_s']:8.0f} MB/s  "
+              f"max_err {p['max_abs_err']:.2e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.out}")
+    if report["determinism_failures"]:
+        for fail in report["determinism_failures"]:
+            print(f"DETERMINISM FAILURE: {fail}", file=sys.stderr)
+        if args.check:
+            sys.exit(1)
+    elif args.check:
+        print("determinism check: ok")
+
+
+if __name__ == "__main__":
+    main()

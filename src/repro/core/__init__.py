@@ -40,6 +40,13 @@ from repro.core.transport import (Delivery, Transport, TransportCaps,
                                   make_transport, register_transport,
                                   validate_transport_kind)
 from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
+from repro.core.wire import (CodecStage, DeltaStage, ErrorFeedbackStage,
+                             HexStage, Int8Stage, Pipeline, PipelineCaps,
+                             PipelineState, RawStage, Stage, TopKStage,
+                             WireDecodeError, WireError, WireHeader,
+                             available_stages, decode_payload,
+                             legacy_pipeline, parse_pipeline, parse_stage,
+                             register_stage, stage_for_codec)
 
 __all__ = [
     "fedavg", "pairwise_average", "trimmed_mean",
@@ -64,4 +71,9 @@ __all__ = [
     "available_transports", "make_transport", "register_transport",
     "validate_transport_kind",
     "UdpReceiver", "UdpSender", "reassemble_partial",
+    "CodecStage", "DeltaStage", "ErrorFeedbackStage", "HexStage",
+    "Int8Stage", "Pipeline", "PipelineCaps", "PipelineState", "RawStage",
+    "Stage", "TopKStage", "WireDecodeError", "WireError", "WireHeader",
+    "available_stages", "decode_payload", "legacy_pipeline",
+    "parse_pipeline", "parse_stage", "register_stage", "stage_for_codec",
 ]

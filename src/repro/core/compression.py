@@ -1,10 +1,15 @@
-"""Payload codecs and gradient-compression utilities.
+"""Legacy payload codecs: the single-stage wire formats.
 
 The paper hex-encodes each weight before packetizing (lossless, 2x inflation).
 We keep that as the faithful codec and add the production codecs a
 thousand-node deployment needs: raw bytes (lossless, 1x), blockwise int8
-quantization (4x smaller, lossy, with error feedback), and top-k
-sparsification (for delta transmission).
+quantization (4x smaller, lossy), and top-k sparsification.
+
+These classes define the **headerless wire layouts** that
+``TransportConfig(codec=...)`` has always produced; the composable wire
+plane (``repro.core.wire``) re-expresses each as a single-stage pipeline
+(byte-identical on this path) and composes them with ``delta``/``ef``
+stages and self-describing headers — see ``docs/WIRE.md``.
 
 All codecs operate on a flat float32 vector — the packetizer owns
 pytree<->vector conversion, and the Pallas ``quantize`` kernel accelerates the
@@ -22,6 +27,14 @@ import numpy as np
 
 _U32 = struct.Struct("!I")
 _U64 = struct.Struct("!Q")
+
+#: Upper bound on a *declared* (wire-supplied) vector length a decoder will
+#: allocate for.  The sparse formats size their output from a header field,
+#: not from the bytes actually present, so without a cap one crafted
+#: payload can demand a u32-limit (~17 GiB) zero vector.  2**28 params
+#: (1 GiB of float32) is far above any model this simulator ships; raise it
+#: module-wide if you legitimately need more.
+MAX_DECODE_PARAMS = 1 << 28
 
 
 class Codec:
@@ -121,6 +134,9 @@ class Int8Codec(Codec):
 def topk_sparsify(vec: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
     vec = np.asarray(vec, dtype=np.float32)
     k = min(k, vec.size)
+    if k <= 0:
+        # argpartition's -k would select the WHOLE array for k=0.
+        return (np.zeros(0, dtype=np.uint32), np.zeros(0, dtype=np.float32))
     idx = np.argpartition(np.abs(vec), -k)[-k:].astype(np.uint32)
     idx.sort()
     return idx, vec[idx]
@@ -129,7 +145,8 @@ def topk_sparsify(vec: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
 @dataclasses.dataclass
 class TopKCodec(Codec):
     """Keep the k largest-magnitude entries. Wire: n(u64) k(u32) | idx u32[k]
-    | vals f32[k]. Use with an ErrorFeedback accumulator for convergence."""
+    | vals f32[k]. Pair with the ``ef`` wire stage (residual error
+    feedback, ``repro.core.wire``) for convergence."""
 
     k_fraction: float = 0.01
     name = "topk"
@@ -137,35 +154,28 @@ class TopKCodec(Codec):
 
     def encode(self, vec: np.ndarray) -> bytes:
         vec = np.asarray(vec, dtype=np.float32)
-        k = max(1, int(vec.size * self.k_fraction))
+        k = min(vec.size, max(1, int(vec.size * self.k_fraction)))
         idx, vals = topk_sparsify(vec, k)
-        return (_U64.pack(vec.size) + _U32.pack(k)
+        # Header k is the ACTUAL entry count: for an empty (or size < k)
+        # vector, packing the requested k would make decode read past the
+        # buffer.
+        return (_U64.pack(vec.size) + _U32.pack(idx.size)
                 + idx.astype("<u4").tobytes() + vals.astype("<f4").tobytes())
 
     def decode(self, data: bytes) -> np.ndarray:
         n = _U64.unpack_from(data, 0)[0]
+        if n > MAX_DECODE_PARAMS:
+            # The output is sized from this wire-supplied field, so it must
+            # be bounded before np.zeros(n) (u32 indices also cannot
+            # address beyond 2**32 by construction).
+            raise ValueError(f"topk n={n} exceeds MAX_DECODE_PARAMS "
+                             f"({MAX_DECODE_PARAMS})")
         k = _U32.unpack_from(data, 8)[0]
         idx = np.frombuffer(data, dtype="<u4", count=k, offset=12)
         vals = np.frombuffer(data, dtype="<f4", count=k, offset=12 + 4 * k)
         out = np.zeros(n, dtype=np.float32)
         out[idx] = vals
         return out
-
-
-class ErrorFeedback:
-    """Residual accumulator for lossy codecs (Seide et al. 2014 style):
-    transmit codec(vec + residual), keep residual = input - decoded."""
-
-    def __init__(self) -> None:
-        self.residual: np.ndarray | None = None
-
-    def compensate(self, vec: np.ndarray) -> np.ndarray:
-        if self.residual is None:
-            return vec
-        return vec + self.residual
-
-    def update(self, compensated: np.ndarray, decoded: np.ndarray) -> None:
-        self.residual = compensated - decoded
 
 
 CODECS: dict[str, type] = {

@@ -166,6 +166,11 @@ class FleetConfig:
     # buffer_k is the aggregation trigger.
     mode: str = "sync"
     buffer_k: int = 8
+    # Wire plane (repro.core.wire): per-direction pipeline specs, forwarded
+    # onto the TransportConfig by build_fleet().  None keeps whatever the
+    # FLConfig's transport already says (usually the legacy codec).
+    uplink: Optional[str] = None        # e.g. "delta|ef|topk(0.01)|int8(1024)"
+    downlink: Optional[str] = None      # e.g. "int8(1024)"
 
     def cohort_specs(self) -> dict[str, CohortSpec]:
         return self.cohorts if self.cohorts is not None else COHORT_PRESETS
@@ -282,8 +287,18 @@ def build_fleet(fleet: FleetConfig, global_params: Any,
     fields so one FleetConfig means one scenario regardless of transport.
     """
     profiles = sample_profiles(fleet)
+    fl_cfg = fl_cfg if fl_cfg is not None else FLConfig()
+    transport = fl_cfg.transport
+    if fleet.uplink is not None or fleet.downlink is not None:
+        transport = dataclasses.replace(
+            transport,
+            uplink=(fleet.uplink if fleet.uplink is not None
+                    else transport.uplink),
+            downlink=(fleet.downlink if fleet.downlink is not None
+                      else transport.downlink))
     fl_cfg = dataclasses.replace(
-        fl_cfg if fl_cfg is not None else FLConfig(),
+        fl_cfg,
+        transport=transport,
         participation_fraction=fleet.participation_fraction,
         min_participants=fleet.min_participants,
         participation_seed=fleet.seed,

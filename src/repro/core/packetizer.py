@@ -3,23 +3,28 @@
 Algorithm I of the paper: get_weights() -> ConvertToHex -> one packet per
 weight. Shipping one packet per scalar weight does not survive contact with a
 34B-parameter model, so the production packetizer flattens the parameter
-pytree to one float32 vector, encodes it with a codec (hex remains available
-as the faithful mode), and slices the byte stream into MTU-sized packets with
-the paper's (X, Np, A) headers. The receiver side reassembles, verifies
-checksums, decodes, and unflattens against the model template (the FL server
-knows the architecture — only weight bytes travel, exactly as in the paper).
+pytree to one float32 vector, encodes it through a **wire pipeline**
+(``repro.core.wire`` — a composed stage list; a bare legacy codec is wrapped
+into a single-stage headerless pipeline, hex remains available as the
+faithful mode), and slices the byte stream into MTU-sized packets with the
+paper's (X, Np, A) headers. The receiver side reassembles, verifies
+checksums, decodes (self-describing payloads decode from their own
+WireHeader), and unflattens against the model template (the FL server knows
+the architecture — only weight bytes travel, exactly as in the paper).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.compression import Codec, RawCodec
 from repro.core.packets import HEADER_BYTES, Packet, make_data_packet
+from repro.core.wire import (Pipeline, PipelineState, WireError,
+                             decode_payload, stage_for_codec)
 
 DEFAULT_MTU = 1500
 _IP_UDP_OVERHEAD = 28  # bytes of IP+UDP headers a real datagram would carry
@@ -94,26 +99,67 @@ def reassemble(packets: dict[int, Packet]) -> bytes:
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class Packetizer:
-    """End-to-end pipeline used by FL clients and the server broadcast."""
+    """End-to-end path used by FL clients and the server broadcast.
 
-    codec: Codec = dataclasses.field(default_factory=RawCodec)
+    Construct with a legacy ``codec`` (wrapped into a single-stage
+    headerless pipeline — byte-identical to the historical wire format) or
+    with an explicit ``pipeline`` (a composed, usually self-describing
+    stage list from ``repro.core.wire``).  Stateful pipelines take an
+    optional per-endpoint ``PipelineState`` on every call; ``None`` means
+    stateless one-shot encoding.
+    """
+
+    codec: Optional[Codec] = None
     mtu: int = DEFAULT_MTU
+    pipeline: Optional[Pipeline] = None
 
-    def to_packets(self, tree: Any, addr: str, txn: int = 0) -> list[Packet]:
-        return packetize(self.codec.encode(flatten_to_vector(tree)),
-                         addr, txn, self.mtu)
+    def __post_init__(self) -> None:
+        if self.pipeline is None:
+            if self.codec is None:
+                self.codec = RawCodec()
+            self.pipeline = Pipeline([stage_for_codec(self.codec)],
+                                     self_describing=False)
+        elif self.codec is not None:
+            raise WireError(
+                "pass either codec= (legacy single-stage) or pipeline=, "
+                "not both — the codec would be silently ignored")
 
-    def from_packets(self, packets: dict[int, Packet], template: Any) -> Any:
-        vec = self.codec.decode(reassemble(packets))
+    def encode_bytes(self, tree: Any,
+                     state: Optional[PipelineState] = None) -> bytes:
+        return self.pipeline.encode(flatten_to_vector(tree), state)
+
+    def decode_bytes(self, data: bytes,
+                     state: Optional[PipelineState] = None) -> np.ndarray:
+        """Wire bytes -> flat float32 vector.  Self-describing payloads
+        decode from their own header (honoring whatever pipeline the sender
+        chose); legacy payloads decode through this packetizer's pipeline.
+        Raises ``WireDecodeError`` for anything malformed."""
+        if self.pipeline.self_describing:
+            vec, _ = decode_payload(data, state)
+            return vec
+        return self.pipeline.decode(data, state)
+
+    def to_packets(self, tree: Any, addr: str, txn: int = 0,
+                   state: Optional[PipelineState] = None) -> list[Packet]:
+        return packetize(self.encode_bytes(tree, state), addr, txn, self.mtu)
+
+    def from_packets(self, packets: dict[int, Packet], template: Any,
+                     state: Optional[PipelineState] = None) -> Any:
+        vec = self.decode_bytes(reassemble(packets), state)
         return unflatten_from_vector(vec, template)
 
-    def wire_bytes(self, tree: Any) -> int:
-        """Total bytes on the wire for this tree under this codec + MTU.
+    def wire_bytes(self, tree: Any,
+                   state: Optional[PipelineState] = None) -> int:
+        """Total bytes on the wire for this tree under this pipeline + MTU.
 
         Computed arithmetically (payload bytes + one header per packet)
         instead of materializing a throwaway packet list just to sum sizes.
+        Measurement is side-effect-free: the encode runs on a *copy* of
+        ``state``, so sizing a transmission never advances a live EF
+        residual that the real send then compensates with.
         """
-        data = self.codec.encode(flatten_to_vector(tree))
+        data = self.encode_bytes(tree,
+                                 state.copy() if state is not None else None)
         payload_max = self.mtu - _IP_UDP_OVERHEAD
         if payload_max <= 0:
             raise ValueError("mtu too small")

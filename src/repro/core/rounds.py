@@ -1,31 +1,29 @@
-"""Federated-learning round orchestration (paper Fig. 4, generalized).
+"""The stable FL facade: :class:`FederatedSystem` = one core + one policy.
 
-One round, per the paper: the server broadcasts the global model; each client
-trains locally; the client ships its weights to the server in packets over the
-Modified UDP; the server aggregates (Eq. 1) and the transport-level ACK
-``(0, 0, A_server)`` closes the client's transaction.
+This module no longer implements rounds — it *binds*.  Everything that used
+to live in the historical round loop has a dedicated home:
 
-Beyond the paper (required at thousand-node scale):
- * round deadline -> straggler cutoff: aggregate whoever arrived (the paper's
-   timer, promoted from packet level to round level);
- * async late-update buffer: a straggler's update that lands after the
-   deadline is folded into the NEXT round with a staleness discount;
- * elastic client pool with health tracking (transport failures demote a
-   client; it is re-admitted after a cool-down);
- * delta transmission + lossy codecs with error feedback;
- * pluggable transport (any name in ``available_transports()``, dispatched
-   through the ``repro.core.transport`` registry) and aggregation
-   (pairwise | fedavg | trimmed_mean, numpy or Pallas-kernel backend);
- * pluggable **scheduling**: ``FLConfig.mode`` selects the round policy —
-   ``"sync"`` (the paper's barrier, bit-compatible with the historical
-   loop) or ``"async"`` (FedBuff-style overlapping rounds, see
-   ``docs/ASYNC.md``).
+* **mechanics** — ``repro.core.server``: :class:`ServerCore` (transport
+  dispatch, downlink/train/uplink legs, wire-pipeline encode/decode with
+  explicit degradation, the late-update staleness buffer, health tracking,
+  aggregation math) and the per-client :class:`ClientSession` state machine;
+* **policy** — ``repro.core.scheduling``: ``FLConfig.mode`` picks
+  ``"sync"`` (the paper's Fig. 4 barrier, bit-compatible with the
+  historical loop — pinned by ``tests/test_orchestrator_equivalence.py``)
+  or ``"async"`` (FedBuff-style overlapping rounds, ``docs/ASYNC.md``);
+* **wire** — ``repro.core.wire``: per-direction codec pipelines
+  (``TransportConfig.uplink`` / ``downlink`` specs such as
+  ``"delta|ef|topk(0.01)|int8(1024)"``), self-describing on the wire; the
+  legacy ``TransportConfig.codec`` string still works byte-identically
+  (``docs/WIRE.md``);
+* **transports** — ``repro.core.transport``: any name in
+  ``available_transports()``, dispatched through the registry.
 
-This module is the stable facade.  The event-driven mechanics live in
-``repro.core.server`` (per-client :class:`ClientSession` pipelines over one
-:class:`ServerCore`); the policies live in ``repro.core.scheduling``.
-``FLConfig`` / ``RoundResult`` / ``FLClient`` / ``ClientPool`` are defined
-in ``repro.core.server`` and re-exported here, alongside
+:class:`FederatedSystem` keeps the historical surface — ``run_round`` /
+``run_rounds`` / ``add_client`` / ``global_params`` / ``history`` — so
+callers written against the pre-refactor orchestrator keep working
+unchanged.  ``FLConfig`` / ``RoundResult`` / ``FLClient`` / ``ClientPool``
+are defined in ``repro.core.server`` and re-exported here, alongside
 ``TransportConfig``, for backward compatibility.
 """
 
@@ -80,7 +78,7 @@ class FederatedSystem:
         self.scheduler.on_client_added(client)
 
     def remove_client(self, addr: str) -> None:
-        self.core.pool.remove(addr)
+        self.core.remove_client(addr)
 
     # -- state owned by the core, surfaced here for compatibility ------------
     @property

@@ -37,12 +37,14 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from repro.core import aggregation as agg
-from repro.core.compression import ErrorFeedback, make_codec
 from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
                                    unflatten_from_vector)
 from repro.core.simulator import Simulator
 from repro.core.transport import (Delivery, Transport, TransportConfig,
                                   make_transport, validate_transport_kind)
+from repro.core.wire import (Pipeline, PipelineState, WireDecodeError,
+                             decode_payload as wire_decode_payload,
+                             legacy_pipeline, parse_pipeline)
 
 
 def _scheduler_registry() -> dict:
@@ -114,6 +116,13 @@ class FLConfig:
             raise ValueError(
                 f"unknown aggregation_backend {self.aggregation_backend!r}; "
                 f"one of {agg.FEDAVG_BACKENDS}")
+        if (self.transport.uplink is not None
+                and (self.send_deltas or self.error_feedback)):
+            raise ValueError(
+                "send_deltas/error_feedback are the legacy spellings of the "
+                "'delta' and 'ef' pipeline stages; with transport.uplink "
+                "set, put the stages in the spec instead "
+                "(e.g. uplink='delta|ef|int8(1024)')")
 
 
 @dataclasses.dataclass
@@ -168,7 +177,8 @@ class FLClient:
         self.weight = weight
         self.cadence_ns = cadence_ns
         self.params: Any = None          # local copy of the global model
-        self.error_feedback = ErrorFeedback()
+        # Wire state (delta references, error-feedback residuals) lives in
+        # per-client PipelineStates owned by ServerCore, not here.
         self.metrics_history: list[dict] = []
 
 
@@ -283,8 +293,31 @@ class ServerCore:
             clients, unhealthy_after=cfg.unhealthy_after_failures,
             readmit_after=cfg.readmit_after_rounds)
         self.global_params = global_params
-        codec = make_codec(cfg.transport.codec, **cfg.transport.codec_kwargs)
-        self.packetizer = Packetizer(codec=codec, mtu=cfg.transport.mtu)
+
+        # Wire plane: one pipeline per direction (repro.core.wire).  A
+        # spec on the TransportConfig means self-describing payloads for
+        # that direction; otherwise the legacy codec runs headerless,
+        # byte-identical to the pre-pipeline wire format (pinned by the
+        # orchestrator-equivalence digests).  delta/ef state lives in
+        # per-client PipelineStates here, not in the orchestration logic.
+        t = cfg.transport
+        self.uplink_pipeline: Pipeline = (
+            parse_pipeline(t.uplink) if t.uplink is not None
+            else legacy_pipeline(t.codec, t.codec_kwargs,
+                                 send_deltas=cfg.send_deltas,
+                                 error_feedback=cfg.error_feedback))
+        self.downlink_pipeline: Pipeline = (
+            parse_pipeline(t.downlink) if t.downlink is not None
+            else legacy_pipeline(t.codec, t.codec_kwargs))
+        self.packetizer = Packetizer(pipeline=self.downlink_pipeline,
+                                     mtu=t.mtu)
+        # Per-(client, direction) wire state, created lazily and persistent
+        # across rounds (an EF residual must survive the round barrier).
+        self._up_enc_state: dict[str, PipelineState] = {}
+        self._down_enc_state: dict[str, PipelineState] = {}
+        # Payloads that failed to decode and were explicitly degraded to a
+        # zero vector (WireDecodeError — never a bare except).
+        self.decode_errors = 0
         self.history: list[RoundResult] = []
         self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
 
@@ -317,11 +350,57 @@ class ServerCore:
     def bind(self, scheduler) -> None:
         self.scheduler = scheduler
 
+    # -- global model + cached size -------------------------------------------
+    @property
+    def global_params(self) -> Any:
+        return self._global_params
+
+    @global_params.setter
+    def global_params(self, value: Any) -> None:
+        # Invalidate the cached flat size: recomputed at most once per
+        # assignment (i.e. per aggregation) instead of once per uplink
+        # delivery — a full pytree flatten used to sit on the hot path.
+        self._global_params = value
+        self._n_params: Optional[int] = None
+
+    @property
+    def n_params(self) -> int:
+        if self._n_params is None:
+            self._n_params = int(flatten_to_vector(self._global_params).size)
+        return self._n_params
+
+    # -- per-client wire state -------------------------------------------------
+    def wire_state(self, addr: str, *, direction: str) -> \
+            Optional[PipelineState]:
+        """The persistent PipelineState for one client's encode side of
+        ``direction`` ("uplink": the client's encoder; "downlink": the
+        server's per-client broadcast encoder).  None when that pipeline is
+        stateless (nothing to persist).  Decode is stateless for every
+        built-in stage."""
+        pipeline, table = {
+            "uplink": (self.uplink_pipeline, self._up_enc_state),
+            "downlink": (self.downlink_pipeline, self._down_enc_state),
+        }[direction]
+        if not pipeline.caps.stateful:
+            return None
+        state = table.get(addr)
+        if state is None:
+            state = table[addr] = pipeline.new_state()
+        return state
+
     # -- receiver plumbing ---------------------------------------------------
     def install_client_rx(self, client: FLClient) -> None:
         self._client_rx[client.addr] = self.transport.create_receiver(
             self.sim, self.sim.node(client.addr), self.cfg.transport,
             self._make_client_deliver(client))
+
+    def remove_client(self, addr: str) -> None:
+        """Elastic removal: drop pool membership AND the client's wire
+        state — a later client at a recycled address must start with a
+        clean delta reference / EF residual, not the dead client's."""
+        self.pool.remove(addr)
+        self._up_enc_state.pop(addr, None)
+        self._down_enc_state.pop(addr, None)
 
     # -- session management --------------------------------------------------
     def new_txn_pair(self) -> tuple[int, int]:
@@ -362,10 +441,13 @@ class ServerCore:
 
     # -- downlink: server -> client -------------------------------------------
     def begin_downlink(self, session: ClientSession) -> None:
-        """Broadcast the current global model to the session's client."""
+        """Broadcast the current global model to the session's client
+        through the downlink pipeline (per-client state: a stateful
+        downlink, e.g. ``ef|int8``, compensates each client separately)."""
         session.state = DOWNLINK
         packets = self.packetizer.to_packets(
-            self.global_params, self.server_addr, session.txn_down)
+            self.global_params, self.server_addr, session.txn_down,
+            state=self.wire_state(session.addr, direction="downlink"))
         self._make_sender(self.server_node,
                           self.sim.node(session.addr), packets,
                           session).start()
@@ -388,7 +470,7 @@ class ServerCore:
                 # Best-effort downlink: the client trains on the zero-filled
                 # model (Delivery.complete makes the gap explicit instead of
                 # silently treating a partial broadcast as the full model).
-                vec = self.decode_vec(d.reassemble())
+                vec = self.decode_vec(d.reassemble(), direction="downlink")
                 client.params = unflatten_from_vector(vec, self.global_params)
             self.schedule_training(session)
         return _cb
@@ -403,24 +485,28 @@ class ServerCore:
             new_params, metrics = client.train_fn(
                 received, session.round_idx, client)
             client.metrics_history.append(metrics)
-            payload_tree = (agg.tree_sub(new_params, received)
-                            if self.cfg.send_deltas else new_params)
             client.params = new_params
-            self.send_update(session, payload_tree)
+            if self.uplink_pipeline.caps.delta_domain:
+                # Prime the delta stage's reference: the model this client
+                # just trained from.  The subtraction itself happens inside
+                # the pipeline, not here.
+                self.uplink_pipeline.set_reference(
+                    self.wire_state(client.addr, direction="uplink"),
+                    flatten_to_vector(received))
+            self.send_update(session, new_params)
         self.sim.schedule(client.train_time_ns, _train_done)
 
     # -- uplink: client -> server -------------------------------------------
     def send_update(self, session: ClientSession, payload_tree: Any) -> None:
+        """Ship ``payload_tree`` through the uplink pipeline.  Delta
+        shipping and error-feedback are pipeline stages; their state
+        (reference model, residual) lives in this client's persistent
+        PipelineState, not here."""
         session.state = UPLINK
         client = session.client
         vec = flatten_to_vector(payload_tree)
-        if self.cfg.error_feedback and not self.packetizer.codec.lossless:
-            comp = client.error_feedback.compensate(vec)
-            data = self.packetizer.codec.encode(comp)
-            decoded = self.packetizer.codec.decode(data)
-            client.error_feedback.update(comp, decoded)
-        else:
-            data = self.packetizer.codec.encode(vec)
+        data = self.uplink_pipeline.encode(
+            vec, self.wire_state(client.addr, direction="uplink"))
         packets = packetize(data, client.addr, session.txn_up,
                             self.packetizer.mtu)
         node = self.sim.node(client.addr)
@@ -445,14 +531,41 @@ class ServerCore:
         session = self.uplink_session(d.sender_addr, d.txn)
         self.scheduler.on_uplink(session, d.sender_addr, d.txn, vec)
 
-    def decode_vec(self, data: bytes) -> np.ndarray:
+    def decode_vec(self, data: bytes, *,
+                   direction: str = "uplink") -> np.ndarray:
         """Decode a (possibly zero-filled) byte stream to a model-sized
-        vector; undecodable or mis-sized payloads degrade to zeros, the
-        capability-driven path for partial deliveries."""
-        n_expected = flatten_to_vector(self.global_params).size
+        vector through the named direction's pipeline.
+
+        Self-describing payloads decode from their own WireHeader (the
+        receiver trusts the wire, not out-of-band config).  A payload that
+        cannot be decoded raises :class:`WireDecodeError` inside the wire
+        layer and is degraded **explicitly** here: zero vector +
+        ``decode_errors`` counter — the same capability-driven zero-fill a
+        partial best-effort delivery gets.  Any other exception is a bug
+        and propagates."""
+        pipeline = (self.uplink_pipeline if direction == "uplink"
+                    else self.downlink_pipeline)
+        n_expected = self.n_params
         try:
-            vec = self.packetizer.codec.decode(data)
-        except Exception:
+            if pipeline.self_describing:
+                vec, negotiated = wire_decode_payload(data)
+                if (negotiated.caps.delta_domain
+                        != pipeline.caps.delta_domain):
+                    # Aggregation semantics are server policy: a header
+                    # whose delta-ness disagrees with the configured
+                    # pipeline would be silently mis-aggregated (a delta
+                    # read as full weights or vice versa), so it is
+                    # refused like any other malformed payload.
+                    raise WireDecodeError(
+                        f"negotiated pipeline {negotiated.spec!r} is "
+                        f"{'delta' if negotiated.caps.delta_domain else 'weight'}"
+                        f"-domain but this server aggregates in the "
+                        f"{'delta' if pipeline.caps.delta_domain else 'weight'}"
+                        f" domain")
+            else:
+                vec = pipeline.decode(data)
+        except WireDecodeError:
+            self.decode_errors += 1
             vec = np.zeros(n_expected, dtype=np.float32)
         if vec.size < n_expected:
             vec = np.concatenate(
@@ -487,11 +600,14 @@ class ServerCore:
     # -- aggregation -----------------------------------------------------------
     def apply_aggregation(self, contribs: list) -> None:
         """Fold ``[(flat vector, weight), ...]`` into the global model —
-        the exact pre-refactor math, shared by every scheduling policy."""
+        the exact pre-refactor math, shared by every scheduling policy.
+        Whether contributions are deltas is a *wire* property now: the
+        uplink pipeline's ``delta_domain`` capability (the legacy
+        ``send_deltas`` flag derives it)."""
         if not contribs:
             return
         template = self.global_params
-        if self.cfg.send_deltas:
+        if self.uplink_pipeline.caps.delta_domain:
             vecs = [v for v, _ in contribs]
             ws = np.asarray([w for _, w in contribs], dtype=np.float32)
             mean_delta = sum(w * v for v, w in zip(vecs, ws)) / ws.sum()

@@ -36,12 +36,15 @@ import abc
 import dataclasses
 from typing import Callable, Optional
 
+import numpy as np
+
 from repro.core.mudp import MudpReceiver, MudpSender
 from repro.core.packets import Packet
 from repro.core.packetizer import DEFAULT_MTU, reassemble
 from repro.core.simulator import Node, Simulator
 from repro.core.tcp import TcpReceiver, TcpSender
 from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
+from repro.core.wire import WireError, parse_pipeline
 
 
 # --------------------------------------------------------------------------
@@ -99,12 +102,24 @@ class TransportConfig:
 
     ``kind`` is validated against the registry at construction time, so a
     typo'd transport name fails at ``FLConfig(...)`` with the list of
-    registered transports instead of deep inside receiver setup.
+    registered transports instead of deep inside receiver setup.  The same
+    goes for the per-direction wire-pipeline specs.
+
+    Wire plane: ``codec`` (+ ``codec_kwargs``) is the legacy single-stage
+    form — headerless, byte-identical to the historical formats.
+    ``uplink`` / ``downlink`` are composed pipeline specs
+    (``repro.core.wire``, e.g. ``"delta|ef|topk(0.01)|int8(1024)"``); when
+    set, that direction ships **self-describing** payloads (a versioned
+    WireHeader the receiver decodes from, no out-of-band config) and
+    ``codec`` is ignored for it.  Each direction is independent — an
+    unset one falls back to the legacy codec.
     """
 
     kind: str = "mudp"                  # any name in available_transports()
     codec: str = "raw"                  # raw | hex | int8 | topk
     codec_kwargs: dict = dataclasses.field(default_factory=dict)
+    uplink: Optional[str] = None        # pipeline spec, client -> server
+    downlink: Optional[str] = None      # pipeline spec, server -> client
     mtu: int = DEFAULT_MTU
     timeout_ns: int = 6_000_000_000     # sender/NACK timer (paper's timer)
     max_retries: int = 3                # the paper's Y
@@ -114,6 +129,34 @@ class TransportConfig:
 
     def __post_init__(self) -> None:
         validate_transport_kind(self.kind)
+        for direction, spec in (("uplink", self.uplink),
+                                ("downlink", self.downlink)):
+            if spec is None:
+                continue
+            try:
+                pipeline = parse_pipeline(spec)
+            except WireError as e:
+                raise ValueError(
+                    f"bad {direction} pipeline spec {spec!r}: {e}") from e
+            if direction == "downlink" and pipeline.caps.delta_domain:
+                raise ValueError(
+                    "downlink pipeline cannot contain 'delta': the client "
+                    "needs the full model, not a server-side difference")
+            # Dry-run probe: a spec can parse yet be incoherent between
+            # stages (e.g. "int8(1024)|raw" — raw upcasts the int8 body,
+            # so every decode fails; "hex|int8" feeds int8 non-floats).
+            # Catching that here costs one 8-element round-trip instead of
+            # a run that silently zero-degrades every payload.
+            probe = np.linspace(-1.0, 1.0, 8, dtype=np.float32)
+            state = pipeline.new_state()
+            pipeline.set_reference(state, np.zeros(8, dtype=np.float32))
+            try:
+                pipeline.decode(pipeline.encode(probe, state),
+                                pipeline.new_state())
+            except WireError as e:
+                raise ValueError(
+                    f"{direction} pipeline {spec!r} cannot round-trip a "
+                    f"payload (incoherent stage order?): {e}") from e
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,895 @@
+"""Composable wire-plane: self-describing codec pipelines.
+
+The single-stage ``Codec`` string on :class:`TransportConfig` couples three
+decisions that scale differently — *what* to ship (weights vs deltas), *how*
+to shrink it (sparsify, quantize), and *how the receiver knows what it got*
+(out-of-band config vs the wire itself).  This module separates them:
+
+* :class:`Stage` — one reversible transform over a flat float32 vector with
+  a per-endpoint/per-direction mutable state slot.  Stages compose:
+  ``delta`` (ship trained - received), ``ef`` (error-feedback residual,
+  wrapping everything downstream of it), ``topk(f)`` (sparsify to values +
+  index sidecar), ``int8(b)`` (blockwise absmax quantization), ``raw`` /
+  ``hex`` (terminal serializers).
+* :class:`Pipeline` — an ordered stage list parsed from a ``|``-separated
+  spec string (``"delta|ef|topk(0.01)|int8(1024)"``) with **derived**
+  capability flags (:class:`PipelineCaps`: lossless, stateful, estimated
+  wire ratio, delta-domain) so callers branch on what a pipeline guarantees,
+  never on its spelling.
+* :class:`WireHeader` — a versioned header prepended to every
+  self-describing payload: magic, wire version, the canonical pipeline spec,
+  and each stage's dynamic per-message params.  The receiver rebuilds the
+  pipeline **from the wire** via the stage registry and decodes with zero
+  out-of-band knowledge; malformed or truncated payloads raise
+  :class:`WireDecodeError` with a reason instead of being swallowed by a
+  bare ``except``.
+* the registry — ``register_stage`` / ``parse_pipeline`` /
+  ``available_stages``, mirroring the transport registry, so third-party
+  stages participate in specs and in wire negotiation for free.
+
+**Legacy mode.**  ``Pipeline`` also runs *headerless* (``self_describing=
+False``): the terminal stage emits exactly the historical ``Codec`` wire
+bytes (``repro.core.compression``) and transform stages touch only local
+state.  This is how ``TransportConfig(codec="int8")`` keeps producing
+byte-identical traffic — the 24 pinned orchestrator-equivalence digests are
+the proof that the redesign is a pure refactor on that path.
+
+State model: a :class:`Pipeline` object is immutable/shareable; everything
+mutable (delta references, EF residuals) lives in a :class:`PipelineState`
+created per (endpoint, direction) via :meth:`Pipeline.new_state`.  Decode
+is stateless for every built-in stage, which is what makes decoding from
+the header alone possible.
+"""
+
+from __future__ import annotations
+
+import abc
+import binascii
+import struct
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.compression import (MAX_DECODE_PARAMS, HexCodec, Int8Codec,
+                                    RawCodec, TopKCodec, dequantize_int8,
+                                    quantize_int8, topk_sparsify)
+
+_U16 = struct.Struct("!H")
+_U32 = struct.Struct("!I")
+_U64 = struct.Struct("!Q")
+
+#: Wire magic + current header version.  Bump the version for any layout
+#: change; receivers reject versions they do not understand explicitly.
+WIRE_MAGIC = b"WP"
+WIRE_VERSION = 1
+
+#: Body dtypes a terminal stage may emit, indexed by the code stored in the
+#: header.  Codes are append-only (removing or reordering would silently
+#: reinterpret old payloads).
+_BODY_DTYPES: tuple[str, ...] = ("<f4", "i1", "u1", "<u4")
+
+
+class WireError(ValueError):
+    """Mis-use of the wire API (bad spec, bad composition, bad config)."""
+
+
+class WireDecodeError(WireError):
+    """A payload that cannot be decoded: wrong magic, unknown version or
+    stage, truncated header/params/body, or a count mismatch inside a
+    stage.  The FL layer degrades these *explicitly* (zero-fill + counter),
+    anything else propagates."""
+
+
+def _body_dtype_code(dtype: np.dtype) -> int:
+    s = np.dtype(dtype).str.lstrip("=|")
+    for i, d in enumerate(_BODY_DTYPES):
+        if np.dtype(d) == np.dtype(dtype):
+            return i
+    raise WireError(f"unsupported body dtype {s!r}")
+
+
+# --------------------------------------------------------------------------
+# Per-direction state
+# --------------------------------------------------------------------------
+class PipelineState:
+    """Mutable state for one (endpoint, direction): one dict slot per stage.
+
+    Created by :meth:`Pipeline.new_state`; the orchestrator keeps one per
+    client per direction, which is where delta references and EF residuals
+    live (they used to live on ``FLClient`` / inside ``ServerCore``).
+    """
+
+    def __init__(self, n_stages: int):
+        self.slots: list[dict] = [{} for _ in range(n_stages)]
+
+    def copy(self) -> "PipelineState":
+        """Slot-shallow copy: stages replace slot values wholesale (never
+        mutate arrays in place), so copying the dicts is enough to run a
+        what-if encode without touching the live state."""
+        out = PipelineState(len(self.slots))
+        out.slots = [dict(s) for s in self.slots]
+        return out
+
+    def __repr__(self) -> str:
+        keys = [sorted(s) for s in self.slots]
+        return f"PipelineState({keys})"
+
+
+# --------------------------------------------------------------------------
+# Stage ABC
+# --------------------------------------------------------------------------
+class Stage(abc.ABC):
+    """One composable wire transform over numpy arrays.
+
+    ``encode(arr, slot) -> (arr_out, params)``: transform the array and
+    return the dynamic per-message params the *decoder* needs (goes into
+    the :class:`WireHeader`; empty for stages that are self-inverse).
+    ``decode(arr, params, slot)`` inverts it.  Both sides receive a mutable
+    per-(endpoint, direction) ``slot`` dict; decode must work with an empty
+    slot for the built-ins (wire negotiation decodes with fresh state).
+
+    Class attributes drive the derived pipeline capabilities: ``lossless``
+    (decode∘encode is the identity), ``stateful`` (encode reads/writes the
+    slot), ``est_ratio`` (estimated encoded-bytes / input-bytes, used by
+    planners and benchmarks — an estimate, not a promise).
+    """
+
+    name: str = "abstract"
+    lossless: bool = True
+    stateful: bool = False
+    est_ratio: float = 1.0
+    # The encoded array is a difference against a reference the decoder
+    # does not reconstruct (decode stays in the delta domain).  Drives
+    # PipelineCaps.delta_domain — declare it on third-party delta-like
+    # stages so the server aggregates them correctly; such stages receive
+    # the reference via slot["ref"] from Pipeline.set_reference.
+    delta_domain: bool = False
+    # Encode output is not coordinate-aligned with its input (reordered,
+    # re-lengthed, or re-typed).  An `ef` stage must not follow one: its
+    # residual would be added across mismatched coordinates.
+    remaps_coordinates: bool = False
+
+    @abc.abstractmethod
+    def encode(self, arr: np.ndarray, slot: dict
+               ) -> tuple[np.ndarray, bytes]: ...
+
+    @abc.abstractmethod
+    def decode(self, arr: np.ndarray, params: bytes,
+               slot: dict) -> np.ndarray: ...
+
+    def spec(self) -> str:
+        """Canonical spec token; ``parse_stage(s.spec())`` reconstructs."""
+        return self.name
+
+    # -- legacy (headerless) terminal serialization -------------------------
+    # Implemented only by the classic codec stages (raw/hex/int8/topk):
+    # byte-identical to the historical repro.core.compression wire formats.
+    legacy_codec = None   # a compression.Codec instance, or None
+
+    def legacy_encode(self, vec: np.ndarray) -> bytes:
+        if self.legacy_codec is None:
+            raise WireError(f"stage {self.name!r} cannot terminate a "
+                            f"legacy (headerless) pipeline")
+        return self.legacy_codec.encode(vec)
+
+    def legacy_decode(self, data: bytes) -> np.ndarray:
+        if self.legacy_codec is None:
+            raise WireError(f"stage {self.name!r} cannot terminate a "
+                            f"legacy (headerless) pipeline")
+        return self.legacy_codec.decode(data)
+
+
+def _require_f4(arr: np.ndarray, stage: str) -> np.ndarray:
+    arr = np.asarray(arr)
+    if arr.dtype != np.dtype("<f4"):
+        raise WireError(f"stage {stage!r} requires a float32 input, got "
+                        f"{arr.dtype} (check stage order in the spec)")
+    return arr
+
+
+# --------------------------------------------------------------------------
+# Transform stages: delta, ef
+# --------------------------------------------------------------------------
+class DeltaStage(Stage):
+    """Ship ``vec - reference`` instead of ``vec``.
+
+    The encoder's slot holds the reference (the model the endpoint last
+    received), primed by the orchestrator via
+    :meth:`Pipeline.set_reference`; an unprimed reference counts as zero,
+    so the first update is a delta against the zero model.  Decode is the
+    identity: the receiver *aggregates in the delta domain*
+    (``PipelineCaps.delta_domain`` tells it to), it never reconstructs the
+    sender's full model.
+    """
+
+    name = "delta"
+    lossless = True
+    stateful = True
+    est_ratio = 1.0
+    delta_domain = True
+
+    def encode(self, arr, slot):
+        arr = _require_f4(arr, self.name)
+        ref = slot.get("ref")
+        if ref is None:
+            return arr, b""
+        if ref.size != arr.size:
+            raise WireError(f"delta reference has {ref.size} params, "
+                            f"update has {arr.size}")
+        return arr - ref, b""
+
+    def decode(self, arr, params, slot):
+        return arr
+
+
+class ErrorFeedbackStage(Stage):
+    """Residual compensation (Seide et al. 2014) for everything downstream.
+
+    Encode-side only: the pipeline transmits ``tail(vec + residual)`` and
+    stores ``residual = (vec + residual) - tail_decoded`` in the slot, so
+    whatever the lossy tail dropped this message is re-injected into the
+    next one.  Decode is the identity.  The tail round-trip is orchestrated
+    by :class:`Pipeline` (this stage wraps everything after it).
+    """
+
+    name = "ef"
+    lossless = True          # adds information back, never discards it
+    stateful = True
+    est_ratio = 1.0
+
+    def compensate(self, arr: np.ndarray, slot: dict) -> np.ndarray:
+        arr = _require_f4(arr, self.name)
+        residual = slot.get("residual")
+        if residual is None:
+            return arr
+        return arr + residual
+
+    def update(self, compensated: np.ndarray, decoded: np.ndarray,
+               slot: dict) -> None:
+        slot["residual"] = compensated - decoded
+
+    def encode(self, arr, slot):     # pragma: no cover - pipeline intercepts
+        raise WireError("ef is applied by Pipeline (it wraps the tail); "
+                        "it cannot be encoded standalone")
+
+    def decode(self, arr, params, slot):
+        return arr
+
+
+# --------------------------------------------------------------------------
+# Compression stages: topk, int8
+# --------------------------------------------------------------------------
+class TopKStage(Stage):
+    """Keep the ``k = max(1, k_fraction * n)`` largest-|x| entries.
+
+    Encode emits the kept *values* as the flowing vector (so a downstream
+    quantizer compresses them further) and ``n`` + the sorted indices as
+    params.  Wire cost ≈ ``8 bytes/kept`` alone, less when composed.
+    """
+
+    name = "topk"
+    lossless = False
+    stateful = False
+    remaps_coordinates = True     # output = values at per-message indices
+
+    def __init__(self, k_fraction: float = 0.01):
+        if not 0.0 < k_fraction <= 1.0:
+            raise WireError(f"topk fraction must be in (0, 1], "
+                            f"got {k_fraction}")
+        self.k_fraction = float(k_fraction)
+        self.est_ratio = 2.0 * self.k_fraction   # (u4 idx + f4 val) per kept
+        self.legacy_codec = TopKCodec(k_fraction=self.k_fraction)
+
+    def spec(self) -> str:
+        return f"topk({self.k_fraction:g})"
+
+    def encode(self, arr, slot):
+        arr = _require_f4(arr, self.name)
+        k = min(arr.size, max(1, int(arr.size * self.k_fraction)))
+        idx, vals = topk_sparsify(arr, k)
+        params = _U64.pack(arr.size) + idx.astype("<u4").tobytes()
+        return np.ascontiguousarray(vals, dtype="<f4"), params
+
+    def decode(self, arr, params, slot):
+        if len(params) < 8:
+            raise WireDecodeError("topk params truncated")
+        n = _U64.unpack_from(params, 0)[0]
+        if n > MAX_DECODE_PARAMS:
+            # A wire-controlled u64 must never size an allocation
+            # unchecked (and u32 indices cannot address beyond 2**32
+            # anyway); the cap lives in repro.core.compression.
+            raise WireDecodeError(f"topk n={n} exceeds MAX_DECODE_PARAMS "
+                                  f"({MAX_DECODE_PARAMS})")
+        idx = np.frombuffer(params, dtype="<u4", offset=8)
+        vals = np.asarray(arr, dtype=np.float32)
+        if idx.size != vals.size:
+            raise WireDecodeError(f"topk index/value count mismatch: "
+                                  f"{idx.size} vs {vals.size}")
+        if idx.size and (n == 0 or int(idx.max()) >= n):
+            raise WireDecodeError("topk index out of range")
+        out = np.zeros(n, dtype=np.float32)
+        out[idx] = vals
+        return out
+
+
+class Int8Stage(Stage):
+    """Blockwise absmax int8 quantization (the ``quantize`` kernel's wire
+    twin).  Encode emits the int8 values as the flowing array and
+    ``n, block`` + per-block float32 scales as params."""
+
+    name = "int8"
+    lossless = False
+    remaps_coordinates = True     # block padding changes the length
+
+    def __init__(self, block: int = 1024):
+        if block < 1:
+            raise WireError(f"int8 block must be >= 1, got {block}")
+        self.block = int(block)
+        self.est_ratio = 0.25 + 4.0 / (4.0 * self.block)  # q + scale share
+        self.legacy_codec = Int8Codec(block=self.block)
+
+    def spec(self) -> str:
+        return f"int8({self.block})"
+
+    def encode(self, arr, slot):
+        arr = _require_f4(arr, self.name)
+        q, scales = quantize_int8(arr, self.block)
+        params = (_U64.pack(arr.size) + _U32.pack(self.block)
+                  + scales.astype("<f4").tobytes())
+        return q, params
+
+    def decode(self, arr, params, slot):
+        if len(params) < 12:
+            raise WireDecodeError("int8 params truncated")
+        n = _U64.unpack_from(params, 0)[0]
+        block = _U32.unpack_from(params, 8)[0]
+        if block < 1:
+            raise WireDecodeError("int8 block must be >= 1")
+        scales = np.frombuffer(params, dtype="<f4", offset=12)
+        q = np.asarray(arr)
+        if q.dtype != np.int8:
+            raise WireDecodeError(f"int8 body has dtype {q.dtype}, "
+                                  f"expected int8")
+        nb = -(-n // block) if n else 0
+        if scales.size != nb or q.size != nb * block:
+            raise WireDecodeError(
+                f"int8 count mismatch: n={n} block={block} expects "
+                f"{nb} scales / {nb * block} values, got "
+                f"{scales.size} / {q.size}")
+        return dequantize_int8(q, scales.astype(np.float32), n, block)
+
+
+# --------------------------------------------------------------------------
+# Terminal serializers: raw, hex
+# --------------------------------------------------------------------------
+class RawStage(Stage):
+    """Identity over float32 — the 4-bytes/param wire floor."""
+
+    name = "raw"
+    lossless = True
+    est_ratio = 1.0
+    legacy_codec = RawCodec()
+
+    def encode(self, arr, slot):
+        return np.ascontiguousarray(arr, dtype="<f4"), b""
+
+    def decode(self, arr, params, slot):
+        return np.asarray(arr, dtype=np.float32)
+
+
+class HexStage(Stage):
+    """The paper's codec (Algorithm I ``ConvertToHex``): hexlify the input
+    bytes, 2x inflation.  Generic over input dtype (the code travels in
+    params) so it composes after any stage."""
+
+    name = "hex"
+    lossless = True
+    est_ratio = 2.0
+    remaps_coordinates = True     # bytes-of-hex, not aligned floats
+    legacy_codec = HexCodec()
+
+    def encode(self, arr, slot):
+        arr = np.ascontiguousarray(arr)
+        code = _body_dtype_code(arr.dtype)
+        out = np.frombuffer(binascii.hexlify(arr.tobytes()), dtype=np.uint8)
+        return out, bytes([code])
+
+    def decode(self, arr, params, slot):
+        if len(params) != 1 or params[0] >= len(_BODY_DTYPES):
+            raise WireDecodeError("hex params must be one dtype code")
+        try:
+            raw = binascii.unhexlify(np.ascontiguousarray(arr).tobytes())
+        except binascii.Error as e:
+            raise WireDecodeError(f"hex body is not hexadecimal: {e}") from e
+        return np.frombuffer(raw, dtype=_BODY_DTYPES[params[0]]).copy()
+
+
+# --------------------------------------------------------------------------
+# Registry + spec parser (the transport-registry idiom)
+# --------------------------------------------------------------------------
+_STAGES: dict[str, Callable[..., Stage]] = {}
+
+
+def register_stage(name: str, factory: Callable[..., Stage], *,
+                   overwrite: bool = False) -> None:
+    """Register a stage factory under ``name``.  The factory is called with
+    the (already number-parsed) args from the spec token, e.g.
+    ``topk(0.01)`` calls ``factory(0.01)``.  Re-registering raises unless
+    ``overwrite=True`` — silently shadowing ``int8`` would corrupt every
+    payload already in flight under the old meaning."""
+    if not overwrite and name in _STAGES:
+        raise WireError(f"stage {name!r} is already registered "
+                        f"(pass overwrite=True to replace it)")
+    if overwrite:
+        _NEGOTIATED.clear()   # memoized pipelines may hold the old stage
+    _STAGES[name] = factory
+
+
+def available_stages() -> list[str]:
+    return sorted(_STAGES)
+
+
+def _parse_number(tok: str) -> float | int:
+    try:
+        return int(tok)
+    except ValueError:
+        try:
+            return float(tok)
+        except ValueError:
+            raise WireError(f"bad stage argument {tok!r}") from None
+
+
+def parse_stage(token: str) -> Stage:
+    """``"topk(0.01)"`` -> a TopKStage.  Raises WireError for unknown names
+    or malformed args (WireDecodeError when reached from a wire header)."""
+    token = token.strip()
+    name, args = token, ()
+    if "(" in token:
+        if not token.endswith(")"):
+            raise WireError(f"malformed stage token {token!r}")
+        name, _, arg_s = token[:-1].partition("(")
+        name = name.strip()
+        if arg_s.strip():
+            args = tuple(_parse_number(a.strip()) for a in arg_s.split(","))
+    try:
+        factory = _STAGES[name]
+    except KeyError:
+        raise WireError(f"unknown stage {name!r}; registered stages: "
+                        f"{available_stages()}") from None
+    try:
+        return factory(*args)
+    except WireError:
+        raise
+    except Exception as e:
+        # Specs can arrive from the wire ('int8(inf)', 'raw(1)', ...): any
+        # constructor rejection must stay inside the WireError contract so
+        # the server degrades the payload instead of crashing.
+        raise WireError(f"stage {name!r} rejected args {args!r}: "
+                        f"{type(e).__name__}: {e}") from e
+
+
+def parse_pipeline(spec: str) -> "Pipeline":
+    """``"delta|ef|topk(0.01)|int8(1024)"`` -> a Pipeline (self-describing
+    by default)."""
+    tokens = [t for t in (tok.strip() for tok in spec.split("|")) if t]
+    if not tokens:
+        raise WireError(f"empty pipeline spec {spec!r}")
+    return Pipeline([parse_stage(t) for t in tokens])
+
+
+# --------------------------------------------------------------------------
+# The header
+# --------------------------------------------------------------------------
+class WireHeader:
+    """``magic | version(u8) | spec_len(u16) spec | dtype(u8) |
+    n_stages(u8) | per stage: params_len(u32) params`` — everything a
+    receiver needs to rebuild the pipeline and decode the body."""
+
+    __slots__ = ("version", "spec", "dtype_code", "stage_params")
+
+    def __init__(self, spec: str, stage_params: list[bytes],
+                 dtype_code: int, version: int = WIRE_VERSION):
+        self.version = version
+        self.spec = spec
+        self.dtype_code = dtype_code
+        self.stage_params = stage_params
+
+    def pack(self) -> bytes:
+        spec_b = self.spec.encode("utf-8")
+        if len(spec_b) > 0xFFFF:
+            raise WireError("pipeline spec too long")
+        if len(self.stage_params) > 0xFF:
+            raise WireError("too many stages")
+        out = [WIRE_MAGIC, bytes([self.version]),
+               _U16.pack(len(spec_b)), spec_b,
+               bytes([self.dtype_code, len(self.stage_params)])]
+        for p in self.stage_params:
+            out.append(_U32.pack(len(p)))
+            out.append(p)
+        return b"".join(out)
+
+    @classmethod
+    def unpack(cls, data: bytes) -> tuple["WireHeader", int]:
+        """Parse a header off the front of ``data``; returns (header, body
+        offset).  Every malformation raises WireDecodeError with a reason."""
+        if len(data) < 6:
+            raise WireDecodeError(f"payload too short for a wire header "
+                                  f"({len(data)} bytes)")
+        if data[:2] != WIRE_MAGIC:
+            raise WireDecodeError(f"bad wire magic {data[:2]!r}")
+        version = data[2]
+        if not 1 <= version <= WIRE_VERSION:
+            raise WireDecodeError(f"unsupported wire version {version}")
+        spec_len = _U16.unpack_from(data, 3)[0]
+        off = 5
+        if len(data) < off + spec_len + 2:
+            raise WireDecodeError("truncated wire header (spec)")
+        try:
+            spec = data[off:off + spec_len].decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise WireDecodeError(f"undecodable pipeline spec: {e}") from e
+        off += spec_len
+        dtype_code = data[off]
+        if dtype_code >= len(_BODY_DTYPES):
+            raise WireDecodeError(f"unknown body dtype code {dtype_code}")
+        n_stages = data[off + 1]
+        off += 2
+        params: list[bytes] = []
+        for _ in range(n_stages):
+            if len(data) < off + 4:
+                raise WireDecodeError("truncated wire header (params length)")
+            plen = _U32.unpack_from(data, off)[0]
+            off += 4
+            if len(data) < off + plen:
+                raise WireDecodeError("truncated wire header (params body)")
+            params.append(data[off:off + plen])
+            off += plen
+        return cls(spec, params, dtype_code, version), off
+
+
+# --------------------------------------------------------------------------
+# Derived capabilities
+# --------------------------------------------------------------------------
+class PipelineCaps:
+    """What a composed pipeline guarantees, derived from its stages."""
+
+    __slots__ = ("lossless", "stateful", "est_ratio", "delta_domain")
+
+    def __init__(self, stages: list[Stage]):
+        self.lossless = all(s.lossless for s in stages)
+        self.stateful = any(s.stateful for s in stages)
+        ratio = 1.0
+        for s in stages:
+            ratio *= s.est_ratio
+        self.est_ratio = ratio
+        self.delta_domain = any(s.delta_domain for s in stages)
+
+    def __repr__(self) -> str:
+        return (f"PipelineCaps(lossless={self.lossless}, "
+                f"stateful={self.stateful}, est_ratio={self.est_ratio:.4g}, "
+                f"delta_domain={self.delta_domain})")
+
+
+# --------------------------------------------------------------------------
+# The pipeline
+# --------------------------------------------------------------------------
+class Pipeline:
+    """An ordered, immutable stage composition.
+
+    ``self_describing=True`` (the default, and what ``parse_pipeline``
+    returns): ``encode`` prepends a :class:`WireHeader` and any receiver
+    decodes via :func:`decode_payload` from the wire alone.
+    ``self_describing=False`` (legacy): headerless — the terminal stage
+    emits the historical codec bytes and ``decode`` needs this pipeline
+    out-of-band, exactly the pre-refactor contract.
+    """
+
+    def __init__(self, stages: list[Stage], *, self_describing: bool = True):
+        if not stages:
+            raise WireError("a pipeline needs at least one stage")
+        if isinstance(stages[-1], ErrorFeedbackStage):
+            raise WireError("ef cannot be the terminal stage "
+                            "(it wraps the stages after it)")
+        ef_seen = remapped = False
+        for s in stages:
+            if isinstance(s, ErrorFeedbackStage):
+                if remapped:
+                    # Residual coordinates would belong to the PREVIOUS
+                    # message's remapping (e.g. last round's top-k set) —
+                    # compensation across mismatched coordinates silently
+                    # corrupts every update.
+                    raise WireError(
+                        "ef must precede any coordinate-remapping stage "
+                        "(topk/int8/hex); order the spec 'ef|topk|...'")
+                ef_seen = True
+            remapped = remapped or s.remaps_coordinates
+            if ef_seen and s.delta_domain:
+                # delta's decode intentionally stays in the delta domain
+                # (not an encode-inverse), so a wrapping ef would compute
+                # residual = comp - (comp - ref) = ref and re-inject the
+                # whole reference model every message.
+                raise WireError("ef cannot wrap delta; order the spec "
+                                "'delta|ef|...' so the residual tracks "
+                                "only what the lossy tail dropped")
+        self.stages = list(stages)
+        self.self_describing = self_describing
+        self.caps = PipelineCaps(self.stages)
+        self.spec = "|".join(s.spec() for s in self.stages)
+
+    def __repr__(self) -> str:
+        mode = "wire" if self.self_describing else "legacy"
+        return f"Pipeline({self.spec!r}, {mode})"
+
+    # -- state ---------------------------------------------------------------
+    def new_state(self) -> PipelineState:
+        return PipelineState(len(self.stages))
+
+    def set_reference(self, state: PipelineState, vec: np.ndarray) -> None:
+        """Prime every delta stage's reference (the model this endpoint
+        last received); the orchestrator calls this at downlink time."""
+        ref = np.ascontiguousarray(vec, dtype=np.float32)
+        for i, s in enumerate(self.stages):
+            if s.delta_domain:
+                state.slots[i]["ref"] = ref
+
+    def _state(self, state: Optional[PipelineState]) -> PipelineState:
+        if state is None:
+            return self.new_state()
+        if len(state.slots) != len(self.stages):
+            raise WireError(f"state has {len(state.slots)} slots, pipeline "
+                            f"{self.spec!r} has {len(self.stages)} stages")
+        return state
+
+    # -- encode ---------------------------------------------------------------
+    def encode(self, vec: np.ndarray,
+               state: Optional[PipelineState] = None) -> bytes:
+        """flat float32 vector -> wire bytes (headered unless legacy)."""
+        state = self._state(state)
+        vec = np.ascontiguousarray(vec, dtype=np.float32)
+        if not self.self_describing:
+            return self._encode_legacy(vec, state)
+        arr = vec
+        params: list[bytes] = []
+        ef_marks: list[tuple[int, np.ndarray]] = []   # (index, compensated)
+        for i, stage in enumerate(self.stages):
+            if isinstance(stage, ErrorFeedbackStage):
+                arr = stage.compensate(arr, state.slots[i])
+                ef_marks.append((i, arr))
+                params.append(b"")
+                continue
+            arr, p = stage.encode(arr, state.slots[i])
+            params.append(p)
+        # EF residual updates: decode each wrapped tail (deepest first) and
+        # store comp - decoded.  Array-domain decode is numerically
+        # identical to decoding the wire bytes (tobytes/frombuffer round-
+        # trips exactly), so no second serialization happens.
+        for i, comp in reversed(ef_marks):
+            decoded = self._decode_tail(arr, params, i + 1, None)
+            self.stages[i].update(comp, decoded, state.slots[i])
+        header = WireHeader(self.spec, params, _body_dtype_code(arr.dtype))
+        return header.pack() + np.ascontiguousarray(arr).tobytes()
+
+    def _encode_legacy(self, vec: np.ndarray, state: PipelineState) -> bytes:
+        arr = vec
+        ef_marks: list[tuple[int, np.ndarray]] = []
+        for i, stage in enumerate(self.stages[:-1]):
+            if isinstance(stage, ErrorFeedbackStage):
+                arr = stage.compensate(arr, state.slots[i])
+                ef_marks.append((i, arr))
+                continue
+            arr, p = stage.encode(arr, state.slots[i])
+            if p:
+                raise WireError(
+                    f"stage {stage.spec()!r} emits wire params and cannot "
+                    f"ride a legacy (headerless) pipeline mid-stream")
+        terminal = self.stages[-1]
+        data = terminal.legacy_encode(arr)
+        if ef_marks:
+            # The historical EF contract: residual against the terminal
+            # codec's own decode of the just-encoded bytes.
+            decoded = terminal.legacy_decode(data)
+            for i, comp in reversed(ef_marks):
+                # Transform stages between ef and the terminal are identity
+                # on decode (delta) — the built-in legacy pipelines are
+                # [delta?][ef?][codec], so decoded already matches comp's
+                # domain.
+                self.stages[i].update(comp, decoded, state.slots[i])
+        return data
+
+    # -- decode ---------------------------------------------------------------
+    def _decode_tail(self, arr: np.ndarray, params: list[bytes],
+                     start: int, state: Optional[PipelineState]
+                     ) -> np.ndarray:
+        for i in range(len(self.stages) - 1, start - 1, -1):
+            slot = state.slots[i] if state is not None else {}
+            try:
+                arr = self.stages[i].decode(arr, params[i], slot)
+            except WireDecodeError:
+                raise
+            except Exception as e:
+                raise WireDecodeError(
+                    f"stage {self.stages[i].spec()!r} failed to decode: "
+                    f"{type(e).__name__}: {e}") from e
+        return arr
+
+    def decode(self, data: bytes,
+               state: Optional[PipelineState] = None) -> np.ndarray:
+        """wire bytes -> flat float32 vector.
+
+        Self-describing pipelines parse their own header (and verify the
+        header names *this* spec — use :func:`decode_payload` to honor
+        whatever pipeline the sender chose).  Legacy pipelines decode the
+        raw codec bytes.  All failures surface as WireDecodeError.
+        """
+        state = self._state(state)
+        if not self.self_describing:
+            try:
+                arr = self.stages[-1].legacy_decode(data)
+            except WireError:
+                raise
+            except Exception as e:
+                raise WireDecodeError(
+                    f"legacy payload undecodable under "
+                    f"{self.stages[-1].spec()!r}: {type(e).__name__}: {e}"
+                ) from e
+            # Transform stages (delta/ef) are identity on decode; run them
+            # anyway so third-party transform stages keep working here.
+            for i in range(len(self.stages) - 2, -1, -1):
+                arr = self.stages[i].decode(arr, b"", state.slots[i])
+            return np.asarray(arr, dtype=np.float32)
+        header, off = WireHeader.unpack(data)
+        if header.spec != self.spec:
+            raise WireDecodeError(
+                f"header names pipeline {header.spec!r}, this pipeline is "
+                f"{self.spec!r} (use decode_payload for negotiation)")
+        return self._decode_body(header, data, off, state)
+
+    def _decode_body(self, header: WireHeader, data: bytes, off: int,
+                     state: Optional[PipelineState]) -> np.ndarray:
+        if len(header.stage_params) != len(self.stages):
+            raise WireDecodeError(
+                f"header carries {len(header.stage_params)} stage params, "
+                f"pipeline {self.spec!r} has {len(self.stages)} stages")
+        dtype = np.dtype(_BODY_DTYPES[header.dtype_code])
+        body = data[off:]
+        if len(body) % dtype.itemsize:
+            raise WireDecodeError(
+                f"body length {len(body)} is not a multiple of "
+                f"{dtype.itemsize}-byte {dtype} items")
+        arr = np.frombuffer(body, dtype=dtype)
+        vec = np.asarray(self._decode_tail(arr, header.stage_params, 0,
+                                           state), dtype=np.float32)
+        if not vec.flags.writeable:
+            # Pass-through terminals (raw, bare delta) would hand back a
+            # read-only view of the wire buffer; the codec contract has
+            # always returned a writable array.
+            vec = vec.copy()
+        return vec
+
+
+# --------------------------------------------------------------------------
+# Wire negotiation: decode from the header alone
+# --------------------------------------------------------------------------
+# Negotiation sits on the per-delivery hot path: memoize spec -> Pipeline
+# (pipelines are immutable and state lives outside them, so sharing one
+# instance across receivers is safe).  Invalidated implicitly by spec text;
+# register_stage(..., overwrite=True) mid-run is the one case a stale entry
+# could survive, so the cache is cleared there.  Size-capped because the
+# keys are wire-supplied: a sender cycling through distinct parseable specs
+# must not grow server memory without bound.
+_NEGOTIATED: dict[str, Pipeline] = {}
+_NEGOTIATED_CAP = 256
+
+
+def decode_payload(data: bytes,
+                   state: Optional[PipelineState] = None
+                   ) -> tuple[np.ndarray, Pipeline]:
+    """Decode a self-describing payload with **zero out-of-band knowledge**:
+    parse the header, rebuild the sender's pipeline from the stage
+    registry, decode the body.  Returns ``(vector, pipeline)`` so the
+    caller can branch on the negotiated ``pipeline.caps`` (e.g. aggregate
+    in the delta domain).  Raises WireDecodeError for anything malformed,
+    including spec tokens naming unregistered stages."""
+    header, off = WireHeader.unpack(data)
+    pipeline = _NEGOTIATED.get(header.spec)
+    if pipeline is None:
+        try:
+            pipeline = parse_pipeline(header.spec)
+        except WireError as e:
+            raise WireDecodeError(
+                f"header pipeline spec rejected: {e}") from e
+        if len(_NEGOTIATED) >= _NEGOTIATED_CAP:
+            _NEGOTIATED.clear()   # rare full reset beats unbounded growth
+        _NEGOTIATED[header.spec] = pipeline
+    if state is not None and len(state.slots) != len(pipeline.stages):
+        state = None   # negotiated spec changed shape; decode is stateless
+    vec = pipeline._decode_body(header, data, off, state)
+    return vec, pipeline
+
+
+# --------------------------------------------------------------------------
+# Legacy bridge: TransportConfig(codec=...) -> headerless pipelines
+# --------------------------------------------------------------------------
+def legacy_pipeline(codec: str, codec_kwargs: Optional[dict] = None, *,
+                    send_deltas: bool = False,
+                    error_feedback: bool = False) -> Pipeline:
+    """The pre-refactor wire behavior as a pipeline: ``[delta?][ef?][codec]``
+    headerless.  EF is included only for lossy codecs — byte- and
+    state-identical to the old hand-wired ``ServerCore.send_update`` path
+    (pinned by the orchestrator-equivalence digests)."""
+    kwargs = dict(codec_kwargs or {})
+    if "(" in codec:
+        if kwargs:
+            raise WireError(
+                f"codec {codec!r} embeds its args; passing codec_kwargs="
+                f"{kwargs} too is ambiguous — use one or the other")
+        terminal = parse_stage(codec)
+    else:
+        terminal = _terminal_from_name(codec, kwargs)
+    stages: list[Stage] = []
+    if send_deltas:
+        stages.append(DeltaStage())
+    if error_feedback and not terminal.lossless:
+        stages.append(ErrorFeedbackStage())
+    stages.append(terminal)
+    return Pipeline(stages, self_describing=False)
+
+
+class CodecStage(Stage):
+    """Adapter: any legacy :class:`repro.core.compression.Codec` instance
+    as a terminal stage.  Headered mode ships the codec's own bytes as a
+    uint8 body; wire negotiation of a CodecStage requires its name to be
+    registered (the four built-ins map to canonical stages instead)."""
+
+    def __init__(self, codec):
+        self.codec = codec
+        self.name = codec.name
+        self.lossless = codec.lossless
+        self.legacy_codec = codec
+
+    def encode(self, arr, slot):
+        arr = _require_f4(arr, self.name)
+        return np.frombuffer(self.codec.encode(arr), dtype=np.uint8), b""
+
+    def decode(self, arr, params, slot):
+        data = np.ascontiguousarray(arr, dtype=np.uint8).tobytes()
+        try:
+            return np.asarray(self.codec.decode(data), dtype=np.float32)
+        except Exception as e:
+            raise WireDecodeError(f"codec {self.name!r} failed to decode: "
+                                  f"{type(e).__name__}: {e}") from e
+
+
+def stage_for_codec(codec) -> Stage:
+    """Map a legacy Codec instance onto its canonical stage (the four
+    built-ins) or a :class:`CodecStage` adapter (anything else)."""
+    if isinstance(codec, RawCodec):
+        return RawStage()
+    if isinstance(codec, HexCodec):
+        return HexStage()
+    if isinstance(codec, Int8Codec):
+        return Int8Stage(block=codec.block)
+    if isinstance(codec, TopKCodec):
+        return TopKStage(codec.k_fraction)
+    return CodecStage(codec)
+
+
+def _terminal_from_name(codec: str, kwargs: dict) -> Stage:
+    # Codec kwargs use the compression.py names; map them onto stage args.
+    if codec == "int8":
+        return Int8Stage(**kwargs)
+    if codec == "topk":
+        if "k_fraction" in kwargs:
+            return TopKStage(kwargs["k_fraction"])
+        return TopKStage(**kwargs)
+    if kwargs:
+        raise WireError(f"codec {codec!r} takes no kwargs, got {kwargs}")
+    return parse_stage(codec)
+
+
+register_stage("delta", DeltaStage)
+register_stage("ef", ErrorFeedbackStage)
+register_stage("topk", TopKStage)
+register_stage("int8", Int8Stage)
+register_stage("raw", RawStage)
+register_stage("hex", HexStage)

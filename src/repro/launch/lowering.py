@@ -69,6 +69,16 @@ CELL_RULES_OVERRIDES: dict[tuple[str, str], dict] = {
 }
 
 
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to one flat dict: older jax
+    returns a one-element list of per-device dicts, newer jax the dict
+    itself, and either may be None for unsupported backends."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def cell_is_skipped(arch: str, shape_name: str) -> Optional[str]:
     if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
         return ("pure full-attention arch: 500k decode cache excluded "
@@ -225,7 +235,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             mem.argument_size_in_bytes + mem.temp_size_in_bytes
             + mem.output_size_in_bytes - mem.alias_size_in_bytes)
 
-        ca = compiled.cost_analysis() or {}
+        ca = xla_cost_dict(compiled)
         rep.xla_flops_raw = float(ca.get("flops", 0.0))
 
         cost = hlo_cost.analyze_hlo_text(compiled.as_text())

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.launch.hlo_cost import analyze_hlo_text
+from repro.launch.lowering import xla_cost_dict
 
 
 class TestHloCost:
@@ -18,7 +19,7 @@ class TestHloCost:
         mine = analyze_hlo_text(c.as_text())
         assert mine.flops == pytest.approx(2 * 512 ** 3, rel=1e-6)
         # XLA's own count agrees on a loop-free graph
-        assert mine.flops == pytest.approx(c.cost_analysis()["flops"],
+        assert mine.flops == pytest.approx(xla_cost_dict(c)["flops"],
                                            rel=0.01)
 
     def test_scan_flops_are_trip_count_multiplied(self):
@@ -29,7 +30,7 @@ class TestHloCost:
             lambda x, _: (x @ b, None), a, None, length=7)[0])
         c = f.lower(a, a).compile()
         assert analyze_hlo_text(c.as_text()).flops == 7 * 2 * 512 ** 3
-        assert c.cost_analysis()["flops"] < 2 * 2 * 512 ** 3  # undercounts
+        assert xla_cost_dict(c)["flops"] < 2 * 2 * 512 ** 3  # undercounts
 
     def test_nested_scan_multiplies(self):
         a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
@@ -48,14 +49,23 @@ class TestHloCost:
         code = textwrap.dedent("""
             import os
             os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=4'
+            import inspect
             import jax, jax.numpy as jnp
             from jax.sharding import PartitionSpec as P
             from repro.launch.hlo_cost import analyze_hlo_text
+            # jax.shard_map landed after 0.4.x; the replication-check kwarg
+            # was renamed check_rep -> check_vma along the way.
+            shard_map = getattr(jax, 'shard_map', None)
+            if shard_map is None:
+                from jax.experimental.shard_map import shard_map
+            params = inspect.signature(shard_map).parameters
+            kw = ({'check_vma': False} if 'check_vma' in params
+                  else {'check_rep': False})
             mesh = jax.make_mesh((4,), ('x',))
             def f(a):
-                return jax.shard_map(lambda v: jax.lax.psum(v, 'x'),
-                                     mesh=mesh, in_specs=P('x'),
-                                     out_specs=P(), check_vma=False)(a)
+                return shard_map(lambda v: jax.lax.psum(v, 'x'),
+                                 mesh=mesh, in_specs=P('x'),
+                                 out_specs=P(), **kw)(a)
             a = jax.ShapeDtypeStruct((4, 256), jnp.float32)
             c = jax.jit(f).lower(a).compile()
             cost = analyze_hlo_text(c.as_text())
@@ -102,8 +112,10 @@ class TestDryrunPlumbing:
             assert cost.collective_bytes > 0   # grad reduce must exist
             print('OK')
         """)
+        # Hang guard only, not a speed assertion: the yi-9b smoke compile
+        # takes minutes on a share-throttled CPU, and 300s proved flaky.
         r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                           text=True, timeout=300,
+                           text=True, timeout=1200,
                            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
         assert "OK" in r.stdout, (r.stdout[-500:], r.stderr[-1500:])
 

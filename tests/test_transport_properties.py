@@ -10,6 +10,9 @@ corrupted payload.
 import dataclasses
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.channel import BernoulliLoss, DropList, Link
