@@ -5,9 +5,12 @@ For each fleet size and each transport in ``available_transports()`` the
 same seeded :class:`FleetConfig` (identical cohorts, link draws, and
 per-round client samples — the transport is the only variable) runs
 ``--rounds`` FL rounds of the synthetic consensus objective and reports:
-simulated round time, rounds/sec (simulated and wall), bytes on wire,
-retransmissions, arrivals vs roster (stragglers cut at the deadline), and
-rounds-to-target-loss.  Results land in ``--out`` (default
+simulated round time, rounds/sec (simulated and wall), bytes on wire
+(total and per hop), retransmissions, arrivals vs roster (stragglers cut
+at the deadline), and rounds-to-target-loss.  ``--topology hier|gossip``
+swaps the wiring (edge aggregation / serverless peer exchange —
+``repro.core.topology``); a ``scaling`` section summarizes
+clients-vs-wall-time across the ``--clients`` sweep.  Results land in ``--out`` (default
 ``BENCH_fleet.json``); everything outside the top-level ``"wall"`` key is
 bit-for-bit reproducible for a fixed seed (``--replay-check`` proves it by
 running the whole matrix twice).
@@ -37,15 +40,20 @@ NS_PER_SEC = 1_000_000_000
 def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
               participation: float, deadline_ns: int, n_params: int,
               engine: str = "batched", mode: str = "sync",
-              buffer_k: int = 8) -> dict:
+              buffer_k: int = 8, topology: str = "star", cells: int = 4,
+              neighbors: int = 4) -> dict:
     """One (transport, fleet size) cell. Returns a JSON-ready dict whose
     every field derives from the simulation — no wall-clock anywhere.
     ``mode="async"`` runs FedBuff-style scheduling: each row is one
-    buffered aggregation instead of one barrier round."""
+    buffered aggregation instead of one barrier round.  ``topology``
+    picks the wiring (repro.core.topology): ``star``, ``hier`` (with
+    ``cells`` edge aggregators), or ``gossip`` (degree ``neighbors``)."""
     fleet = FleetConfig(n_clients=n_clients, seed=seed,
                         participation_fraction=participation,
                         round_deadline_ns=deadline_ns, engine=engine,
-                        mode=mode, buffer_k=buffer_k)
+                        mode=mode, buffer_k=buffer_k, topology=topology,
+                        cells=min(cells, n_clients),
+                        neighbors=min(neighbors, n_clients - 1))
     objective = ConsensusObjective(n_clients, n_params, seed=seed)
     fl_cfg = FLConfig(
         aggregation="fedavg",
@@ -89,6 +97,7 @@ def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
     # early with fewer aggregations than asked for.
     return {
         "cohorts": cohort_counts(profiles),
+        "hop_bytes": dict(sorted(sim.hop_bytes.items())),
         "profiles_digest": profiles_digest(profiles),
         "rounds": round_rows,
         "sim_time_ns": sim_ns,
@@ -119,7 +128,9 @@ def run_matrix(args, transports: list[str]) -> tuple[dict, dict, dict]:
                     seed=args.seed, participation=args.participation,
                     deadline_ns=int(args.deadline_s * NS_PER_SEC),
                     n_params=args.params, engine=args.engine,
-                    mode=args.mode, buffer_k=args.buffer_k)
+                    mode=args.mode, buffer_k=args.buffer_k,
+                    topology=args.topology, cells=args.cells,
+                    neighbors=args.neighbors)
             except Exception as e:  # noqa: BLE001 - a cell failure is a row
                 errors[f"{n_clients}/{tr}"] = f"{type(e).__name__}: {e}"
                 continue
@@ -184,6 +195,17 @@ def main() -> int:
                          "per-session watchdog)")
     ap.add_argument("--buffer-k", type=int, default=8,
                     help="async only: updates buffered per aggregation")
+    ap.add_argument("--topology", default="star",
+                    choices=["star", "hier", "gossip"],
+                    help="fleet wiring (repro.core.topology): the paper's "
+                         "star, hierarchical edge aggregation, or "
+                         "serverless gossip")
+    ap.add_argument("--cells", type=int, default=4,
+                    help="hier only: number of edge aggregators "
+                         "(clamped to the fleet size)")
+    ap.add_argument("--neighbors", type=int, default=4,
+                    help="gossip only: target peer degree "
+                         "(clamped to n_clients - 1)")
     ap.add_argument("--out", default="BENCH_fleet.json")
     ap.add_argument("--replay-check", action="store_true",
                     help="run the matrix twice and fail unless the "
@@ -201,6 +223,24 @@ def main() -> int:
                      f"{available_transports()}")
 
     fleets, wall, errors = run_matrix(args, requested)
+
+    # Clients-vs-wall-time scaling: one row per fleet size, total wall
+    # across transports, so doubling --clients answers "how does the
+    # simulator cost grow?" at a glance.
+    scaling = []
+    for n in args.clients:
+        cells = wall.get(str(n), {})
+        total = sum(c["wall_s"] for c in cells.values())
+        scaling.append({
+            "clients": n,
+            "wall_s_total": total,
+            "wall_s_per_client": total / n if n else None,
+            "rounds_per_wall_sec": (len(cells) * args.rounds / total
+                                    if total else None),
+        })
+        print(f"scaling: clients={n} wall_s={total:.2f} "
+              f"wall_s_per_client={total / n:.4f}", flush=True)
+
     report = {
         "meta": {
             "clients": args.clients,
@@ -213,10 +253,14 @@ def main() -> int:
             "engine": args.engine,
             "mode": args.mode,
             "buffer_k": args.buffer_k,
+            "topology": args.topology,
+            "cells": args.cells,
+            "neighbors": args.neighbors,
         },
         "fleets": fleets,
         "errors": errors,
         "wall": wall,
+        "scaling": scaling,
     }
 
     if args.replay_check:

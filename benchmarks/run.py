@@ -13,14 +13,15 @@ import time
 
 from benchmarks import (aggregation, async_vs_sync, codecs, fl_convergence,
                         fleet_scale, kernels_bench, roofline, simcore,
-                        transport_comparison, transport_scenarios,
-                        wire_bench)
+                        topology_bench, transport_comparison,
+                        transport_scenarios, wire_bench)
 
 SUITES = {
     "simcore": simcore,
     "transport_scenarios": transport_scenarios,
     "transport_comparison": transport_comparison,
     "fleet_scale": fleet_scale,
+    "topology": topology_bench,
     "async_vs_sync": async_vs_sync,
     "fl_convergence": fl_convergence,
     "codecs": codecs,

@@ -1,0 +1,223 @@
+"""Benchmark — topology engine: star vs hierarchical vs gossip federation.
+
+One seeded fleet (identical cohorts and link draws — the *wiring* is the
+only variable) runs the synthetic consensus objective under:
+
+* ``star``  — the paper's single server (baseline),
+* ``hier``  — edge aggregation at each cell count in ``--cells``,
+* ``gossip`` — serverless peer exchange at degree ``--neighbors``.
+
+Reported per cell: final loss, per-hop byte counters
+(``Simulator.hop_bytes``), and round rows.  The claims under test:
+
+1. the root link shrinks ~linearly in aggregator count — per-aggregator
+   root-link bytes are ~constant while the star's server link carries the
+   full O(clients) stream;
+2. hier converges to the same final loss as star (weighted FedAvg
+   decomposes exactly across tiers);
+3. gossip reaches the target loss with **zero** server nodes in the
+   simulation.
+
+``--check`` turns those three into hard gates (non-zero exit) — CI runs
+that and uploads ``BENCH_topology.json``.
+
+  PYTHONPATH=src python benchmarks/topology_bench.py
+  PYTHONPATH=src python benchmarks/topology_bench.py --check \\
+      --clients 64 --cells 2,4,8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import (ConsensusObjective, FLConfig, FleetConfig,
+                        TransportConfig, build_fleet, profiles_digest)
+
+NS_PER_SEC = 1_000_000_000
+
+
+def run_topology(topology: str, *, n_clients: int, rounds: int, seed: int,
+                 n_params: int, transport: str, cells: int = 4,
+                 neighbors: int = 4, engine: str = "batched") -> dict:
+    """One topology cell: every field derives from the simulation."""
+    fleet = FleetConfig(n_clients=n_clients, seed=seed, engine=engine,
+                        topology=topology, cells=cells, neighbors=neighbors)
+    objective = ConsensusObjective(n_clients, n_params, seed=seed)
+    fl_cfg = FLConfig(transport=TransportConfig(
+        kind=transport, timeout_ns=2 * NS_PER_SEC,
+        udp_deadline_ns=3 * NS_PER_SEC))
+    sim, system, profiles = build_fleet(fleet, objective.init_params(),
+                                        objective.train_fn, fl_cfg)
+    loss0 = objective.loss(system.global_params)
+    rows, losses = [], []
+
+    def _on_round(r, params):
+        loss = objective.loss(params)
+        losses.append(loss)
+        rows.append({"round": r.round_idx, "duration_ns": r.duration_ns,
+                     "arrived": len(r.arrived), "roster": len(r.roster),
+                     "bytes_sent": r.bytes_sent,
+                     "retransmissions": r.retransmissions, "loss": loss})
+
+    system.on_round_end = _on_round
+    system.run_rounds(rounds)
+    server_node_count = sum(
+        1 for addr in sim._nodes
+        if addr == fleet.server_addr
+        or addr.startswith("10.2."))   # edge server planes
+    return {
+        "topology": topology,
+        "cells": cells if topology == "hier" else None,
+        "neighbors": neighbors if topology == "gossip" else None,
+        "profiles_digest": profiles_digest(profiles),
+        "rounds": rows,
+        "hop_bytes": dict(sorted(sim.hop_bytes.items())),
+        "hop_packets": dict(sorted(sim.hop_packets.items())),
+        "server_nodes": server_node_count,
+        "sim_time_ns": sum(r["duration_ns"] for r in rows),
+        "initial_loss": loss0,
+        "final_loss": losses[-1] if losses else loss0,
+        "rounds_to_target_loss": next(
+            (i + 1 for i, l in enumerate(losses) if l <= 0.1 * loss0), None),
+    }
+
+
+def run_suite(args) -> tuple[dict, dict, list[str]]:
+    """(deterministic results, wall section, gate failures)."""
+    results: dict = {}
+    wall: dict = {}
+    common = dict(n_clients=args.clients, rounds=args.rounds,
+                  seed=args.seed, n_params=args.params,
+                  transport=args.transport, engine=args.engine,
+                  neighbors=args.neighbors)
+
+    def _run(key, topology, **kw):
+        t0 = time.perf_counter()
+        cell = run_topology(topology, **{**common, **kw})
+        wall[key] = {"wall_s": time.perf_counter() - t0}
+        results[key] = cell
+        root = (cell["hop_bytes"].get("edge->root")
+                or cell["hop_bytes"].get("client->server")
+                or cell["hop_bytes"].get("peer->peer"))
+        print(f"topology/{key},{wall[key]['wall_s'] * 1e6:.1f},"
+              f"loss={cell['final_loss']:.4f}"
+              f";root_bytes={root}"
+              f";server_nodes={cell['server_nodes']}", flush=True)
+        return cell
+
+    star = _run("star", "star")
+    hier_cells = {}
+    for c in args.cells:
+        hier_cells[c] = _run(f"hier_cells{c}", "hier", cells=c)
+    gossip = _run(f"gossip_k{args.neighbors}", "gossip")
+
+    # -- gates ---------------------------------------------------------------
+    failures: list[str] = []
+    loss0 = star["initial_loss"]
+
+    # Gate 1: per-aggregator root traffic ~constant => root link scales
+    # with cells, not clients (the star server link is the O(clients)
+    # reference point).
+    per_agg = {c: hier_cells[c]["hop_bytes"]["edge->root"] / c
+               for c in args.cells}
+    if max(per_agg.values()) > 1.6 * min(per_agg.values()):
+        failures.append(f"root-link bytes not ~linear in aggregator count: "
+                        f"per-aggregator bytes {per_agg}")
+    star_server_link = star["hop_bytes"]["client->server"]
+    for c in args.cells:
+        expect = star_server_link * c / args.clients
+        got = hier_cells[c]["hop_bytes"]["edge->root"]
+        if not 0.4 * expect <= got <= 2.5 * expect:
+            failures.append(
+                f"hier cells={c}: root link {got}B not ~{expect:.0f}B "
+                f"(= star server link x cells/clients)")
+
+    # Gate 2: equal final loss (hierarchical FedAvg decomposes exactly).
+    for c in args.cells:
+        gap = abs(hier_cells[c]["final_loss"] - star["final_loss"])
+        if gap > 0.02 * loss0:
+            failures.append(f"hier cells={c}: final loss "
+                            f"{hier_cells[c]['final_loss']:.6f} != star "
+                            f"{star['final_loss']:.6f} (gap {gap:.2e})")
+
+    # Gate 3: gossip reaches the target loss with zero server nodes.
+    if gossip["server_nodes"] != 0:
+        failures.append(f"gossip wired {gossip['server_nodes']} server "
+                        f"nodes; expected 0")
+    if gossip["rounds_to_target_loss"] is None:
+        failures.append(f"gossip never reached 10% of initial loss "
+                        f"(final {gossip['final_loss']:.4f} vs initial "
+                        f"{gossip['initial_loss']:.4f})")
+    return results, wall, failures
+
+
+def bench(rounds: int = 2):
+    """benchmarks.run harness entry: one small cell per topology."""
+    rows = []
+    for topology, kw in (("star", {}), ("hier", {"cells": 4}),
+                         ("gossip", {"neighbors": 3})):
+        t0 = time.perf_counter()
+        cell = run_topology(topology, n_clients=16, rounds=rounds, seed=0,
+                            n_params=1024, transport="mudp", **kw)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        root = (cell["hop_bytes"].get("edge->root")
+                or cell["hop_bytes"].get("client->server")
+                or cell["hop_bytes"].get("peer->peer"))
+        rows.append((f"topology/{topology}_c16", wall_us,
+                     f"loss={cell['final_loss']:.4f}"
+                     f";root_bytes={root}"
+                     f";server_nodes={cell['server_nodes']}"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--params", type=int, default=1024,
+                    help="model size in float32 parameters")
+    ap.add_argument("--transport", default="mudp")
+    ap.add_argument("--cells", default="2,4,8",
+                    help="comma-separated hier aggregator counts")
+    ap.add_argument("--neighbors", type=int, default=4,
+                    help="gossip peer degree")
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "per_packet"])
+    ap.add_argument("--out", default="BENCH_topology.json")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) unless the scaling/equal-loss/"
+                         "serverless gates hold")
+    args = ap.parse_args()
+    args.cells = [int(c) for c in str(args.cells).split(",") if c]
+    if any(c < 1 for c in args.cells) or args.rounds < 1:
+        ap.error("--cells and --rounds must be >= 1")
+
+    results, wall, failures = run_suite(args)
+    report = {
+        "meta": {"clients": args.clients, "rounds": args.rounds,
+                 "seed": args.seed, "params": args.params,
+                 "transport": args.transport, "cells": args.cells,
+                 "neighbors": args.neighbors, "engine": args.engine},
+        "results": results,
+        "gate_failures": failures,
+        "wall": wall,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}", flush=True)
+
+    if failures:
+        for msg in failures:
+            print(f"GATE FAILED: {msg}", file=sys.stderr)
+        return 1 if args.check else 0
+    print("gates: root-link ~linear in cells, hier==star loss, "
+          "gossip serverless", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,8 +13,18 @@ client (or the deadline) every round, the async server aggregates
 whenever K updates are buffered while clients re-enter at their own
 cadence.
 
+``--topology`` swaps the wiring (``repro.core.topology``): ``star`` is
+the paper's single server, ``hier`` inserts ``--cells`` edge aggregators
+that run local FedAvg and forward one merged update upstream, ``gossip``
+drops the server entirely and lets peers exchange updates at degree
+``--neighbors``.  Each run prints per-hop byte counters next to the
+time-to-target-loss, so the hierarchy's root-link savings are visible in
+the same breath as its convergence.
+
   PYTHONPATH=src python examples/fleet_sim.py
   PYTHONPATH=src python examples/fleet_sim.py --mode async
+  PYTHONPATH=src python examples/fleet_sim.py --topology hier --cells 6
+  PYTHONPATH=src python examples/fleet_sim.py --topology gossip --mode sync
 """
 
 from __future__ import annotations
@@ -30,9 +40,11 @@ TARGET_FRAC = 0.1                      # time-to-target = loss <= 10% of L0
 NS = 1_000_000_000
 
 
-def run(transport: str, mode: str) -> None:
+def run(transport: str, mode: str, topology: str = "star", cells: int = 4,
+        neighbors: int = 4) -> None:
     fleet = FleetConfig(n_clients=N_CLIENTS, seed=7, mode=mode, buffer_k=8,
-                        round_deadline_ns=4 * NS)
+                        round_deadline_ns=4 * NS, topology=topology,
+                        cells=cells, neighbors=neighbors)
     objective = ConsensusObjective(N_CLIENTS, 1024, seed=7)
     cfg = FLConfig(aggregation="fedavg",
                    transport=TransportConfig(kind=transport,
@@ -44,8 +56,10 @@ def run(transport: str, mode: str) -> None:
     target = TARGET_FRAC * loss0
     crossed_ns = [None]
 
-    print(f"\n=== {transport} / {mode}: {N_CLIENTS} clients, cohorts "
-          f"{cohort_counts(profiles)} ===")
+    shape = {"star": "star", "hier": f"hier x{fleet.cells} cells",
+             "gossip": f"gossip k={fleet.neighbors}"}[topology]
+    print(f"\n=== {transport} / {mode} / {shape}: {N_CLIENTS} clients, "
+          f"cohorts {cohort_counts(profiles)} ===")
 
     def on_round(res, params):
         loss = objective.loss(params)
@@ -61,11 +75,14 @@ def run(transport: str, mode: str) -> None:
 
     system.on_round_end = on_round
     system.run_rounds(ROUNDS[mode])
+    hops = " | ".join(f"{hop} {b / 1e6:.2f} MB"
+                      for hop, b in sorted(sim.hop_bytes.items()))
     if crossed_ns[0] is not None:
         print(f"--> {mode} time-to-target-loss ({TARGET_FRAC:.0%} of L0): "
-              f"{crossed_ns[0] / 1e9:.2f} simulated seconds")
+              f"{crossed_ns[0] / 1e9:.2f} simulated seconds  [{hops}]")
     else:
-        print(f"--> {mode}: target loss not reached in {ROUNDS[mode]} rounds")
+        print(f"--> {mode}: target loss not reached in {ROUNDS[mode]} "
+              f"rounds  [{hops}]")
 
 
 def main() -> None:
@@ -74,16 +91,30 @@ def main() -> None:
                     choices=["sync", "async", "both"],
                     help="scheduling policy to demo (default: both, "
                          "printing time-to-target-loss for each)")
+    ap.add_argument("--topology", default="star",
+                    choices=["star", "hier", "gossip"],
+                    help="fleet wiring: the paper's star, hierarchical "
+                         "edge aggregation, or serverless gossip")
+    ap.add_argument("--cells", type=int, default=4,
+                    help="hier only: number of edge aggregators")
+    ap.add_argument("--neighbors", type=int, default=4,
+                    help="gossip only: target peer degree")
     args = ap.parse_args()
     modes = ["sync", "async"] if args.mode == "both" else [args.mode]
+    if args.topology == "gossip":
+        modes = ["sync"]   # gossip has no server to schedule async rounds
     for transport in ("mudp", "udp"):
         for mode in modes:
-            run(transport, mode)
-    print("\nSame seed, same cohorts — transport and scheduling are the "
-          "only variables. MUDP recovers every update where UDP's "
+            run(transport, mode, topology=args.topology, cells=args.cells,
+                neighbors=args.neighbors)
+    print("\nSame seed, same cohorts — transport, scheduling, and wiring "
+          "are the only variables. MUDP recovers every update where UDP's "
           "zero-filled gaps keep the loss high; the async server stops "
           "paying the round barrier for stragglers, so it reaches the "
-          "target loss in a fraction of the simulated time.")
+          "target loss in a fraction of the simulated time. With "
+          "--topology hier the per-hop counters show the root link "
+          "carrying cells-many merged updates instead of the whole fleet; "
+          "with --topology gossip there is no server link at all.")
 
 
 if __name__ == "__main__":

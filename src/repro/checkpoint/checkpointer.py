@@ -1,27 +1,67 @@
-"""Checkpointing: msgpack + zstd leaf codec, atomic writes, retention.
+"""Checkpointing: self-contained leaf container, atomic writes, retention.
 
 Pytree leaves are serialized path-keyed (shape/dtype-tagged raw bytes,
-zstd-compressed), so restore can reshard onto any topology — the template
-controls placement, the file stores only bytes. Writes are atomic
-(tmp + rename) so a crash mid-save never corrupts the latest checkpoint —
-that plus the FL journal gives the crash-restart story at scale.
+compressed per leaf), so restore can reshard onto any topology — the
+template controls placement, the file stores only bytes.  Writes are
+atomic (tmp + fsync + rename) so a crash mid-save never corrupts the
+latest checkpoint — that plus the FL journal gives the crash-restart
+story at scale.
+
+The container needs nothing beyond the standard library::
+
+    magic "FLCK" | version u8 | codec u8 | manifest_len u32 LE
+    manifest JSON: {"metadata": ..., "leaves": [{name, shape, dtype,
+                                                 offset, size}, ...]}
+    body: concatenated compressed leaf blobs
+
+``codec`` names the compressor per *file*: zlib (always available) or
+zstd (used for writes when the ``zstandard`` package is importable —
+better ratio and speed, but never required to exist).  A reader that
+lacks zstd fails with an explicit error naming the gap instead of a bare
+ImportError at module load: environments without optional packages can
+still import, write, and read their own checkpoints.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
-import shutil
+import struct
+import zlib
 from typing import Any, Optional
 
 import jax
-import msgpack
 import numpy as np
-import zstandard
 
-_CCTX = zstandard.ZstdCompressor(level=3)
-_DCTX = zstandard.ZstdDecompressor()
+try:
+    import zstandard as _zstd
+except ImportError:          # optional: zlib is the floor, not a stub
+    _zstd = None
+
+_MAGIC = b"FLCK"
+_VERSION = 2
+_CODEC_ZLIB = 0
+_CODEC_ZSTD = 1
+_HEADER = struct.Struct("<4sBBI")     # magic, version, codec, manifest_len
+
+
+def _compress(codec: int, raw: bytes) -> bytes:
+    if codec == _CODEC_ZSTD:
+        return _zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(codec: int, blob: bytes) -> bytes:
+    if codec == _CODEC_ZSTD:
+        if _zstd is None:
+            raise RuntimeError(
+                "this checkpoint was written with zstd compression but the "
+                "'zstandard' package is not importable here; install it or "
+                "re-save the checkpoint from a zlib-only environment")
+        return _zstd.ZstdDecompressor().decompress(blob)
+    if codec == _CODEC_ZLIB:
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec id {codec}")
 
 
 def _path_str(path) -> str:
@@ -40,20 +80,31 @@ def _path_str(path) -> str:
 
 def save_pytree(path: str, tree: Any, metadata: Optional[dict] = None
                 ) -> None:
+    codec = _CODEC_ZSTD if _zstd is not None else _CODEC_ZLIB
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    record = {}
+    leaves = []
+    blobs = []
+    offset = 0
     for kpath, leaf in flat:
         arr = np.asarray(leaf)
-        record[_path_str(kpath)] = {
+        blob = _compress(codec, arr.tobytes())
+        leaves.append({
+            "name": _path_str(kpath),
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
-            "data": _CCTX.compress(arr.tobytes()),
-        }
-    blob = msgpack.packb({"leaves": record, "metadata": metadata or {}},
-                         use_bin_type=True)
+            "offset": offset,
+            "size": len(blob),
+        })
+        blobs.append(blob)
+        offset += len(blob)
+    manifest = json.dumps({"metadata": metadata or {},
+                           "leaves": leaves}).encode("utf-8")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(blob)
+        f.write(_HEADER.pack(_MAGIC, _VERSION, codec, len(manifest)))
+        f.write(manifest)
+        for blob in blobs:
+            f.write(blob)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)   # atomic
@@ -62,12 +113,24 @@ def save_pytree(path: str, tree: Any, metadata: Optional[dict] = None
 def load_pytree(path: str, template: Optional[Any] = None
                 ) -> tuple[Any, dict]:
     with open(path, "rb") as f:
-        obj = msgpack.unpackb(f.read(), raw=False)
-    leaves = obj["leaves"]
+        head = f.read(_HEADER.size)
+        if len(head) < _HEADER.size:
+            raise ValueError(f"{path}: truncated checkpoint header")
+        magic, version, codec, manifest_len = _HEADER.unpack(head)
+        if magic != _MAGIC:
+            raise ValueError(f"{path}: not a checkpoint file "
+                             f"(magic {magic!r})")
+        if version != _VERSION:
+            raise ValueError(f"{path}: unsupported checkpoint version "
+                             f"{version} (expected {_VERSION})")
+        manifest = json.loads(f.read(manifest_len).decode("utf-8"))
+        body = f.read()
+    leaves = {rec["name"]: rec for rec in manifest["leaves"]}
 
     def read(name):
         rec = leaves[name]
-        buf = _DCTX.decompress(rec["data"])
+        buf = _decompress(codec,
+                          body[rec["offset"]:rec["offset"] + rec["size"]])
         dt = rec["dtype"]
         if dt == "bfloat16":
             import ml_dtypes  # part of jax deps
@@ -85,7 +148,7 @@ def load_pytree(path: str, template: Optional[Any] = None
             for p in parts[:-1]:
                 cur = cur.setdefault(p, {})
             cur[parts[-1]] = read(name)
-        return out, obj["metadata"]
+        return out, manifest["metadata"]
 
     flat = jax.tree_util.tree_flatten_with_path(template)
     vals = []
@@ -98,11 +161,13 @@ def load_pytree(path: str, template: Optional[Any] = None
         if tuple(arr.shape) != want:
             raise ValueError(f"{name}: shape {arr.shape} != template {want}")
         vals.append(arr)
-    return jax.tree_util.tree_unflatten(flat[1], vals), obj["metadata"]
+    return jax.tree_util.tree_unflatten(flat[1], vals), manifest["metadata"]
 
 
 class CheckpointManager:
     """step-indexed directory of checkpoints with retention."""
+
+    SUFFIX = ".ckpt"
 
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
@@ -110,7 +175,7 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     def _file(self, step: int) -> str:
-        return os.path.join(self.dir, f"ckpt_{step:010d}.msgpack.zst")
+        return os.path.join(self.dir, f"ckpt_{step:010d}{self.SUFFIX}")
 
     def save(self, step: int, tree: Any, metadata: Optional[dict] = None
              ) -> str:
@@ -123,7 +188,7 @@ class CheckpointManager:
     def steps(self) -> list[int]:
         out = []
         for f in os.listdir(self.dir):
-            if f.startswith("ckpt_") and f.endswith(".msgpack.zst"):
+            if f.startswith("ckpt_") and f.endswith(self.SUFFIX):
                 out.append(int(f[5:15]))
         return sorted(out)
 

@@ -35,6 +35,12 @@ from repro.core.scheduling import (SCHEDULERS, AsyncScheduler, SyncScheduler,
 from repro.core.server import ClientPool, ClientSession, ServerCore
 from repro.core.simulator import Node, Simulator
 from repro.core.tcp import TcpReceiver, TcpSender
+from repro.core.topology import (CellScheduler, EdgeAggregator,
+                                 GossipSystem, GossipTopology, HierSystem,
+                                 HierTopology, StarTopology, Topology,
+                                 available_topologies, make_topology,
+                                 neighbor_graph, register_topology,
+                                 topology_hops)
 from repro.core.transport import (Delivery, Transport, TransportCaps,
                                   TransportConfig, available_transports,
                                   make_transport, register_transport,
@@ -45,8 +51,9 @@ from repro.core.wire import (CodecStage, DeltaStage, ErrorFeedbackStage,
                              PipelineState, RawStage, Stage, TopKStage,
                              WireDecodeError, WireError, WireHeader,
                              available_stages, decode_payload,
-                             legacy_pipeline, parse_pipeline, parse_stage,
-                             register_stage, stage_for_codec)
+                             legacy_pipeline, parse_hop_specs,
+                             parse_pipeline, parse_stage, register_stage,
+                             stage_for_codec)
 
 __all__ = [
     "fedavg", "pairwise_average", "trimmed_mean",
@@ -67,6 +74,10 @@ __all__ = [
     "ClientPool", "ClientSession", "ServerCore",
     "Node", "Simulator",
     "TcpReceiver", "TcpSender",
+    "CellScheduler", "EdgeAggregator", "GossipSystem", "GossipTopology",
+    "HierSystem", "HierTopology", "StarTopology", "Topology",
+    "available_topologies", "make_topology", "neighbor_graph",
+    "register_topology", "topology_hops",
     "Delivery", "Transport", "TransportCaps", "TransportConfig",
     "available_transports", "make_transport", "register_transport",
     "validate_transport_kind",
@@ -75,5 +86,6 @@ __all__ = [
     "Int8Stage", "Pipeline", "PipelineCaps", "PipelineState", "RawStage",
     "Stage", "TopKStage", "WireDecodeError", "WireError", "WireHeader",
     "available_stages", "decode_payload", "legacy_pipeline",
-    "parse_pipeline", "parse_stage", "register_stage", "stage_for_codec",
+    "parse_hop_specs", "parse_pipeline", "parse_stage", "register_stage",
+    "stage_for_codec",
 ]

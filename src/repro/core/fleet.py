@@ -16,10 +16,14 @@ step: it turns the paper topology into a *scenario engine* —
   cross-version stability guarantee) keyed by integers, so the same
   :class:`FleetConfig` produces **bit-identical** cohorts on every machine
   and Python version.
-* :func:`build_fleet` — wires the profiles into a :class:`Simulator` star,
-  one asymmetric jittered lossy :class:`Link` pair per client, and returns
-  a ready :class:`FederatedSystem` dispatching through whatever transport
-  the :class:`FLConfig` names.
+* :func:`build_fleet` — samples the cohorts and hands them to the
+  topology named by ``FleetConfig.topology`` (``repro.core.topology``):
+  ``star`` wires the paper's single-server hub (one asymmetric jittered
+  lossy :class:`Link` pair per client), ``hier`` adds edge aggregators
+  between the clients and the root, ``gossip`` goes serverless over a
+  seeded peer graph.  All three return a system with the same
+  ``run_round`` / ``run_rounds`` surface, dispatching through whatever
+  transport the :class:`FLConfig` names.
 * :class:`ConsensusObjective` — a synthetic quadratic objective (each
   client pulls the model toward a private target) whose global loss is
   analytically computable, giving benchmarks a deterministic
@@ -171,9 +175,72 @@ class FleetConfig:
     # FLConfig's transport already says (usually the legacy codec).
     uplink: Optional[str] = None        # e.g. "delta|ef|topk(0.01)|int8(1024)"
     downlink: Optional[str] = None      # e.g. "int8(1024)"
+    # Topology (repro.core.topology): how the fleet is wired.  "star" is
+    # the paper's single server (the default, bit-identical to the
+    # pre-topology wiring); "hier" adds `cells` edge aggregators between
+    # the clients and the root; "gossip" is serverless peer-to-peer over a
+    # seeded ~`neighbors`-regular graph.
+    topology: str = "star"
+    cells: int = 4                      # hier: number of edge aggregators
+    neighbors: int = 4                  # gossip: target peer degree
+    edge_cohort: str = "fiber"          # hier: cohort band for edge<->root links
+    cell_transport: Optional[str] = None   # hier: client<->edge transport kind
+    # Per-hop wire pipeline specs, e.g. for hier:
+    #   "client->edge: topk(0.01)|int8(1024); edge->root: delta"
+    # Hop names are the topology's (topology_hops(name)); mutually
+    # exclusive with the uplink/downlink shorthands above.
+    hops: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        # Topology parameters fail at construction, not deep inside
+        # build_fleet.  Imported lazily: repro.core.topology imports this
+        # module for profiles/links, so a top-level import would be
+        # circular (the _scheduler_registry idiom in repro.core.server).
+        from repro.core.topology import available_topologies, topology_hops
+        from repro.core.transport import validate_transport_kind
+        from repro.core.wire import WireError, parse_hop_specs
+        if self.n_clients < 1:
+            raise ValueError("n_clients must be >= 1")
+        if self.topology not in available_topologies():
+            raise ValueError(f"unknown topology {self.topology!r}; one of "
+                             f"{available_topologies()}")
+        if self.topology == "hier":
+            if not 1 <= self.cells <= 250:
+                raise ValueError("cells must be in [1, 250] (the edge "
+                                 "address planes hold 250 aggregators)")
+            if self.cells > self.n_clients:
+                raise ValueError(f"cells ({self.cells}) cannot exceed "
+                                 f"n_clients ({self.n_clients}): an edge "
+                                 f"aggregator without a cell serves no one")
+            if self.edge_cohort not in self.cohort_specs():
+                raise ValueError(f"unknown edge_cohort {self.edge_cohort!r}; "
+                                 f"available: {sorted(self.cohort_specs())}")
+            if self.cell_transport is not None:
+                validate_transport_kind(self.cell_transport)
+        if self.topology == "gossip":
+            if self.neighbors < 1:
+                raise ValueError("gossip degree (neighbors) must be >= 1")
+            if self.neighbors >= self.n_clients:
+                raise ValueError(f"neighbors ({self.neighbors}) must be < "
+                                 f"n_clients ({self.n_clients}): a client "
+                                 f"cannot gossip with itself")
+        if self.hops is not None:
+            if self.uplink is not None or self.downlink is not None:
+                raise ValueError("hops= and uplink=/downlink= are two "
+                                 "spellings of the same thing; use one")
+            try:
+                parse_hop_specs(self.hops,
+                                known_hops=topology_hops(self.topology))
+            except WireError as e:
+                raise ValueError(f"invalid hops spec: {e}") from None
 
     def cohort_specs(self) -> dict[str, CohortSpec]:
         return self.cohorts if self.cohorts is not None else COHORT_PRESETS
+
+    def cell_of(self, i: int) -> int:
+        """Cell membership of client ``i`` under hier: round-robin, so
+        every cell sees the same cohort mix in expectation."""
+        return i % self.cells
 
 
 def _client_addr(i: int) -> str:
@@ -278,45 +345,24 @@ TrainFnFactory = Callable[[int, ClientProfile], Callable]
 def build_fleet(fleet: FleetConfig, global_params: Any,
                 train_fn_factory: TrainFnFactory,
                 fl_cfg: Optional[FLConfig] = None,
-                ) -> tuple[Simulator, FederatedSystem, list[ClientProfile]]:
-    """Construct the star topology and a ready-to-run FederatedSystem.
+                ) -> tuple[Simulator, Any, list[ClientProfile]]:
+    """Sample the cohorts and hand them to ``fleet.topology`` for wiring.
 
     ``train_fn_factory(i, profile)`` returns the i-th client's train_fn.
     ``fl_cfg`` carries transport/aggregation choices; the fleet's round
     policy (participation, deadline) overrides the corresponding FLConfig
     fields so one FleetConfig means one scenario regardless of transport.
+
+    The returned ``system`` is a :class:`FederatedSystem` under ``star``,
+    a ``HierSystem`` under ``hier``, a ``GossipSystem`` under ``gossip`` —
+    all with the same ``run_round`` / ``run_rounds`` / ``global_params`` /
+    ``history`` / ``on_round_end`` surface (``repro.core.topology``).
     """
+    from repro.core.topology import make_topology
     profiles = sample_profiles(fleet)
-    fl_cfg = fl_cfg if fl_cfg is not None else FLConfig()
-    transport = fl_cfg.transport
-    if fleet.uplink is not None or fleet.downlink is not None:
-        transport = dataclasses.replace(
-            transport,
-            uplink=(fleet.uplink if fleet.uplink is not None
-                    else transport.uplink),
-            downlink=(fleet.downlink if fleet.downlink is not None
-                      else transport.downlink))
-    fl_cfg = dataclasses.replace(
-        fl_cfg,
-        transport=transport,
-        participation_fraction=fleet.participation_fraction,
-        min_participants=fleet.min_participants,
-        participation_seed=fleet.seed,
-        round_deadline_ns=fleet.round_deadline_ns,
-        mode=fleet.mode,
-        buffer_k=fleet.buffer_k,
-    )
-    sim = Simulator(engine=fleet.engine)
-    clients = []
-    for i, p in enumerate(profiles):
-        up, down = links_for(p)
-        sim.connect(p.addr, fleet.server_addr, up, down)
-        clients.append(FLClient(p.addr, train_fn_factory(i, p),
-                                train_time_ns=p.train_time_ns,
-                                weight=p.weight,
-                                cadence_ns=p.cadence_ns))
-    system = FederatedSystem(sim, fleet.server_addr, clients, global_params,
-                             fl_cfg)
+    topo = make_topology(fleet.topology)
+    sim, system = topo.build(fleet, profiles, global_params,
+                             train_fn_factory, fl_cfg)
     return sim, system, profiles
 
 

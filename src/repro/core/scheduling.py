@@ -77,14 +77,27 @@ class SyncScheduler:
         self._deadline_timer = None
         self._late_folded = 0
         self._staleness_clamped = 0
+        self._retx0 = 0
+        self._round_start_ns = 0
+        self._stats0 = core.snapshot_stats()
 
     # -- round driver ---------------------------------------------------------
-    def run_round(self, round_idx: Optional[int] = None) -> RoundResult:
+    def _begin_round(self, round_idx: Optional[int],
+                     txn_pair: Optional[tuple[int, int]] = None,
+                     clear_sessions: bool = True) -> None:
+        """Open the barrier: sample a roster, arm the deadline, start every
+        session.  ``txn_pair`` overrides the round-derived ``(2r, 2r+1)``
+        numbering, and ``clear_sessions=False`` keeps earlier rounds'
+        sessions registered (the hierarchical cell barrier runs many
+        overlapping instances over one simulator, so its rounds draw
+        session-scoped pairs from ``ServerCore.new_txn_pair`` and stragglers
+        must still find their sessions)."""
         core = self.core
         self._round_idx = (self._round_idx + 1 if round_idx is None
                            else round_idx)
         r = self._round_idx
-        core.clear_sessions()
+        if clear_sessions:
+            core.clear_sessions()
         roster = sample_participants(core.pool.active(r), r, self.cfg)
         self._roster = {c.addr: c for c in roster}
         self._resolved = set()
@@ -93,40 +106,45 @@ class SyncScheduler:
         self._round_open = True
         self._late_folded = 0
         self._staleness_clamped = 0
-        retx0 = core.retx_total
-        round_start_ns = core.sim.now_ns
-        stats0 = core.snapshot_stats()
+        self._retx0 = core.retx_total
+        self._round_start_ns = core.sim.now_ns
+        self._stats0 = core.snapshot_stats()
 
         if self.cfg.round_deadline_ns is not None:
             self._deadline_timer = core.sim.schedule(
                 self.cfg.round_deadline_ns, self._on_deadline)
 
+        txn_down, txn_up = txn_pair if txn_pair is not None \
+            else (2 * r, 2 * r + 1)
         for client in roster:
-            session = core.open_session(client, r, 2 * r, 2 * r + 1,
+            session = core.open_session(client, r, txn_down, txn_up,
                                         model_version=r)
             if self.cfg.broadcast_model:
                 core.begin_downlink(session)
             else:
                 core.begin_local(session)
 
-        core.sim.run()
-
-        if self._round_open:       # e.g. every client failed before deadline
-            self._finalize()
-
-        result = RoundResult(
-            round_idx=r,
-            duration_ns=core.sim.now_ns - round_start_ns,
+    def _build_result(self) -> RoundResult:
+        core = self.core
+        return RoundResult(
+            round_idx=self._round_idx,
+            duration_ns=core.sim.now_ns - self._round_start_ns,
             arrived=sorted(self._updates.keys()),
             failed=list(self._failed),
-            skipped_unhealthy=core.pool.benched(r),
+            skipped_unhealthy=core.pool.benched(self._round_idx),
             late_folded=self._late_folded,
-            retransmissions=core.retx_total - retx0,
+            retransmissions=core.retx_total - self._retx0,
             roster=sorted(self._roster),
             staleness_clamped=self._staleness_clamped,
-            **core.stats_delta(stats0),
+            **core.stats_delta(self._stats0),
         )
-        return core.emit_result(result)
+
+    def run_round(self, round_idx: Optional[int] = None) -> RoundResult:
+        self._begin_round(round_idx)
+        self.core.sim.run()
+        if self._round_open:       # e.g. every client failed before deadline
+            self._finalize()
+        return self.core.emit_result(self._build_result())
 
     def run_rounds(self, n: int) -> list[RoundResult]:
         return [self.run_round() for _ in range(n)]

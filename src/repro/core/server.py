@@ -333,6 +333,13 @@ class ServerCore:
             self.install_client_rx(c)
 
         self.scheduler = None            # bound by FederatedSystem
+        # Topology hook (repro.core.topology): when set, a delivered
+        # downlink triggers this callable instead of schedule_training —
+        # the hierarchical topology uses it to run a whole edge-cell round
+        # as one "training" step of the parent tier.  The override owes the
+        # core an eventual send_update()/uplink_update() on the session (or
+        # a session failure), exactly like the default path.
+        self.train_override: Optional[Callable[[ClientSession], None]] = None
         # Session registries: uplink keyed by (client addr, txn_up) — the
         # server-side delivery identity — and downlink by (client addr,
         # txn_down) — the client-receiver identity.  Sync scheduling reuses
@@ -456,7 +463,7 @@ class ServerCore:
         """Skip the downlink (broadcast_model=False): hand the client the
         global model by reference and schedule training."""
         session.client.params = self.global_params
-        self.schedule_training(session)
+        self.begin_training_for(session)
 
     def _make_client_deliver(self, client: FLClient):
         def _cb(d: Delivery) -> None:
@@ -472,10 +479,19 @@ class ServerCore:
                 # silently treating a partial broadcast as the full model).
                 vec = self.decode_vec(d.reassemble(), direction="downlink")
                 client.params = unflatten_from_vector(vec, self.global_params)
-            self.schedule_training(session)
+            self.begin_training_for(session)
         return _cb
 
     # -- local training ------------------------------------------------------
+    def begin_training_for(self, session: ClientSession) -> None:
+        """A delivered (or locally handed) model starts the session's
+        training step: the default timer-driven ``train_fn`` call, or the
+        topology's ``train_override`` (e.g. a nested edge-cell round)."""
+        if self.train_override is not None:
+            self.train_override(session)
+        else:
+            self.schedule_training(session)
+
     def schedule_training(self, session: ClientSession) -> None:
         session.state = TRAINING
         client = session.client
@@ -486,15 +502,22 @@ class ServerCore:
                 received, session.round_idx, client)
             client.metrics_history.append(metrics)
             client.params = new_params
-            if self.uplink_pipeline.caps.delta_domain:
-                # Prime the delta stage's reference: the model this client
-                # just trained from.  The subtraction itself happens inside
-                # the pipeline, not here.
-                self.uplink_pipeline.set_reference(
-                    self.wire_state(client.addr, direction="uplink"),
-                    flatten_to_vector(received))
-            self.send_update(session, new_params)
+            self.uplink_update(session, received, new_params)
         self.sim.schedule(client.train_time_ns, _train_done)
+
+    def uplink_update(self, session: ClientSession, received: Any,
+                      new_params: Any) -> None:
+        """Finish a training step: prime the uplink delta reference with
+        the model the client trained *from* and ship the result.  Shared by
+        the default timer path and topology train overrides."""
+        if self.uplink_pipeline.caps.delta_domain:
+            # Prime the delta stage's reference: the model this client
+            # just trained from.  The subtraction itself happens inside
+            # the pipeline, not here.
+            self.uplink_pipeline.set_reference(
+                self.wire_state(session.addr, direction="uplink"),
+                flatten_to_vector(received))
+        self.send_update(session, new_params)
 
     # -- uplink: client -> server -------------------------------------------
     def send_update(self, session: ClientSession, payload_tree: Any) -> None:
@@ -604,6 +627,13 @@ class ServerCore:
         Whether contributions are deltas is a *wire* property now: the
         uplink pipeline's ``delta_domain`` capability (the legacy
         ``send_deltas`` flag derives it)."""
+        if not contribs:
+            return
+        # An empty-handed hierarchical edge forwards its unchanged model
+        # with weight 0 (so the parent barrier still resolves); such
+        # contributions carry no information and an all-zero-weight fold
+        # would divide by zero, so they are dropped up front.
+        contribs = [(v, w) for v, w in contribs if w > 0.0]
         if not contribs:
             return
         template = self.global_params

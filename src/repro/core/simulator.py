@@ -250,8 +250,24 @@ class Simulator:
             "bytes_sent": 0, "bytes_delivered": 0,
             "sent_data": 0, "dropped_data": 0, "delivered_data": 0,
         }
+        # Per-hop accounting (repro.core.topology): directed (src, dst)
+        # address pairs labeled via label_hop() accumulate sent bytes and
+        # packets under their hop name.  Kept out of ``stats`` so the
+        # replay digests of unlabeled simulations are untouched.
+        self.hop_bytes: dict[str, int] = {}
+        self.hop_packets: dict[str, int] = {}
+        self._hop_of: dict[tuple[str, str], str] = {}
 
     # -- topology ----------------------------------------------------------
+    def label_hop(self, src_addr: str, dst_addr: str, hop: str) -> None:
+        """Tag the directed link ``src -> dst`` as belonging to ``hop``
+        (e.g. ``"client->edge"``); all traffic sent over it accumulates in
+        ``hop_bytes[hop]`` / ``hop_packets[hop]``.  Counted at send time,
+        like ``stats["bytes_sent"]``, so dropped packets are included."""
+        self._hop_of[(src_addr, dst_addr)] = hop
+        self.hop_bytes.setdefault(hop, 0)
+        self.hop_packets.setdefault(hop, 0)
+
     def node(self, addr: str) -> Node:
         if addr not in self._nodes:
             self._nodes[addr] = Node(self, addr)
@@ -289,6 +305,11 @@ class Simulator:
         stats["bytes_sent"] += pkt.size_bytes
         k = _SENT_KEY[pkt.kind]
         stats[k] = stats.get(k, 0) + 1
+        if self._hop_of:
+            hop = self._hop_of.get((src.addr, dst.addr))
+            if hop is not None:
+                self.hop_bytes[hop] += pkt.size_bytes
+                self.hop_packets[hop] += 1
         # FIFO serialization: this packet starts when the link frees up.
         start = max(self.now_ns, link._busy_until_ns)
         ser = link.serialization_ns(pkt.size_bytes)
@@ -361,6 +382,11 @@ class Simulator:
         for kv, c in zip(*np.unique(kinds, return_counts=True)):
             k = _SENT_KEY[PacketKind(int(kv))]
             stats[k] = stats.get(k, 0) + int(c)
+        if self._hop_of:
+            hop = self._hop_of.get((src.addr, dst.addr))
+            if hop is not None:
+                self.hop_bytes[hop] += int(sizes.sum())
+                self.hop_packets[hop] += n
 
         ndrop = int(dropped.sum())
         if ndrop:

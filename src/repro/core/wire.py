@@ -46,7 +46,7 @@ from __future__ import annotations
 import abc
 import binascii
 import struct
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -475,6 +475,46 @@ def parse_pipeline(spec: str) -> "Pipeline":
     if not tokens:
         raise WireError(f"empty pipeline spec {spec!r}")
     return Pipeline([parse_stage(t) for t in tokens])
+
+
+def parse_hop_specs(spec: str,
+                    known_hops: Optional[Sequence[str]] = None
+                    ) -> dict[str, str]:
+    """Parse a *per-hop* pipeline spec string into ``{hop: pipeline spec}``.
+
+    A multi-tier topology (``repro.core.topology``) composes a different
+    wire pipeline on every hop — e.g. a lossy sparsifying uplink from
+    clients to their edge aggregator but a lossless delta on the
+    aggregated edge->root link::
+
+        "client->edge: topk(0.01)|int8(1024); edge->root: delta"
+
+    Entries are ``;``-separated ``hop: pipeline`` pairs (the first ``:``
+    splits, so stage arguments are unaffected).  Every pipeline is parsed
+    eagerly — a typo'd stage fails here, at configuration time, not deep
+    inside a round.  When ``known_hops`` is given, hop names outside it
+    are rejected (each topology publishes its hop names).
+    """
+    out: dict[str, str] = {}
+    for entry in spec.split(";"):
+        entry = entry.strip()
+        if not entry:
+            continue
+        hop, sep, pipe = entry.partition(":")
+        hop, pipe = hop.strip(), pipe.strip()
+        if not sep or not hop or not pipe:
+            raise WireError(f"malformed hop spec entry {entry!r}; expected "
+                            f"'hop: stage|stage(...)'")
+        if hop in out:
+            raise WireError(f"duplicate hop {hop!r} in hop spec")
+        if known_hops is not None and hop not in known_hops:
+            raise WireError(f"unknown hop {hop!r}; this topology's hops: "
+                            f"{sorted(known_hops)}")
+        parse_pipeline(pipe)     # validate eagerly; raises WireError
+        out[hop] = pipe
+    if not out:
+        raise WireError(f"empty hop spec {spec!r}")
+    return out
 
 
 # --------------------------------------------------------------------------

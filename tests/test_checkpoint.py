@@ -1,0 +1,185 @@
+"""Checkpoint layer: container round-trips, retention, journal replay.
+
+The crash-restart story is snapshot (CheckpointManager) + journal
+(FLJournal): the journal says which round to resume and which clients were
+mid-flight, the checkpoint holds the model those facts refer to.  The
+integration test at the bottom drives a real FederatedSystem through a
+simulated crash and verifies the restarted run resumes from the journaled
+round with bit-identical params.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, FLJournal, load_pytree,
+                              save_pytree)
+from repro.checkpoint.checkpointer import _CODEC_ZLIB, _compress, _decompress
+
+
+def tree_equal(a, b) -> bool:
+    if isinstance(a, dict):
+        return (set(a) == set(b)
+                and all(tree_equal(a[k], b[k]) for k in a))
+    return (np.asarray(a).dtype == np.asarray(b).dtype
+            and np.array_equal(np.asarray(a), np.asarray(b)))
+
+
+@pytest.fixture
+def tree():
+    return {
+        "layer0": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                   "b": np.full((4,), -1.5, dtype=np.float32)},
+        "head": np.arange(7, dtype=np.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Container round-trips
+# --------------------------------------------------------------------------
+def test_roundtrip_without_template(tmp_path, tree):
+    p = str(tmp_path / "a.ckpt")
+    save_pytree(p, tree, {"round": 5, "note": "x"})
+    out, meta = load_pytree(p)
+    assert meta == {"round": 5, "note": "x"}
+    assert tree_equal(out, tree)
+
+
+def test_roundtrip_with_template_preserves_structure(tmp_path, tree):
+    p = str(tmp_path / "a.ckpt")
+    save_pytree(p, tree)
+    out, meta = load_pytree(p, template=tree)
+    assert meta == {}
+    assert tree_equal(out, tree)
+
+
+def test_template_shape_mismatch_raises(tmp_path, tree):
+    p = str(tmp_path / "a.ckpt")
+    save_pytree(p, tree)
+    bad = {**tree, "head": np.zeros(9, np.int32)}
+    with pytest.raises(ValueError, match="shape"):
+        load_pytree(p, template=bad)
+
+
+def test_template_missing_leaf_raises(tmp_path, tree):
+    p = str(tmp_path / "a.ckpt")
+    save_pytree(p, tree)
+    bigger = {**tree, "extra": np.zeros(2, np.float32)}
+    with pytest.raises(KeyError, match="extra"):
+        load_pytree(p, template=bigger)
+
+
+def test_not_a_checkpoint_raises(tmp_path):
+    p = str(tmp_path / "junk.ckpt")
+    with open(p, "wb") as f:
+        f.write(b"definitely not a checkpoint")
+    with pytest.raises(ValueError, match="magic|truncated"):
+        load_pytree(p)
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path, tree):
+    p = str(tmp_path / "a.ckpt")
+    save_pytree(p, tree)
+    assert not os.path.exists(p + ".tmp")
+
+
+def test_zlib_codec_always_roundtrips():
+    raw = np.arange(1000, dtype=np.float32).tobytes()
+    assert _decompress(_CODEC_ZLIB, _compress(_CODEC_ZLIB, raw)) == raw
+
+
+# --------------------------------------------------------------------------
+# Manager: step indexing + retention
+# --------------------------------------------------------------------------
+def test_manager_retention_and_latest(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path / "ckpts"), keep=2)
+    for step in (1, 2, 3, 4):
+        m.save(step, tree, {"x": step})
+    assert m.steps() == [3, 4]
+    assert m.latest_step() == 4
+    out, meta = m.restore(tree)
+    assert meta["step"] == 4 and meta["x"] == 4
+    assert tree_equal(out, tree)
+    out3, meta3 = m.restore(tree, step=3)
+    assert meta3["step"] == 3
+
+
+def test_manager_empty_dir_raises(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path / "empty"))
+    with pytest.raises(FileNotFoundError):
+        m.restore(tree)
+
+
+# --------------------------------------------------------------------------
+# Journal: replay bookkeeping
+# --------------------------------------------------------------------------
+def test_journal_resume_and_pending(tmp_path):
+    j = FLJournal(str(tmp_path / "j.log"))
+    assert j.resume_round() == 0 and j.pending_clients() == []
+    j.round_started(0, ["a", "b", "c"])
+    j.update_ingested(0, "a")
+    j.round_finalized(0, "ckpt_0", arrived=["a"], failed=["b", "c"])
+    j.round_started(1, ["a", "b"])
+    j.update_ingested(1, "b")
+    # Crash here: round 1 never finalized.
+    j2 = FLJournal(str(tmp_path / "j.log"))   # reload from disk
+    assert j2.last_finalized_round() == 0
+    assert j2.last_checkpoint() == "ckpt_0"
+    assert j2.resume_round() == 1
+    assert j2.pending_clients() == ["a"]      # b already ingested
+
+
+# --------------------------------------------------------------------------
+# Integration: snapshot/restore + journal replay over a real system
+# --------------------------------------------------------------------------
+def _digest(params) -> bytes:
+    return np.asarray(params["w"], np.float32).tobytes()
+
+
+def test_crash_restart_resumes_bitwise(tmp_path):
+    from repro.core.fleet import (ConsensusObjective, FleetConfig,
+                                  build_fleet)
+    from repro.core.rounds import FLConfig, TransportConfig
+
+    def fresh():
+        obj = ConsensusObjective(8, 32, seed=11)
+        fleet = FleetConfig(n_clients=8, seed=5)
+        return obj, build_fleet(
+            fleet, obj.init_params(), lambda i, p: obj.train_fn(i, p),
+            FLConfig(transport=TransportConfig(kind="mudp")))
+
+    mgr = CheckpointManager(str(tmp_path / "ckpts"), keep=3)
+    journal = FLJournal(str(tmp_path / "journal.log"))
+
+    # First life: run 3 rounds, snapshot + journal each finalize.
+    obj, (sim, system, profiles) = fresh()
+    for r in range(3):
+        journal.round_started(r, sorted(p.addr for p in profiles))
+        result = system.run_round(r)
+        path = mgr.save(r, system.global_params, {"loss":
+                                                  obj.loss(system.global_params)})
+        journal.round_finalized(r, path, arrived=result.arrived,
+                                failed=result.failed)
+    want = _digest(system.global_params)
+
+    # Crash + restart: a brand-new process recovers its position from the
+    # journal and its model from the checkpoint, then replays the rest.
+    journal2 = FLJournal(str(tmp_path / "journal.log"))
+    assert journal2.resume_round() == 3
+    restored, meta = mgr.restore({"w": np.zeros(32, np.float32)})
+    assert meta["step"] == 2
+    assert _digest(restored) == want
+
+    # The restored model continues exactly like the uninterrupted run: an
+    # identical fresh system fast-forwarded to the same round from the
+    # checkpoint produces the same round-3 result (determinism end to end).
+    obj_a, (sim_a, sys_a, _) = fresh()
+    sys_a.run_rounds(3)
+    r_a = sys_a.run_round(3)
+    obj_b, (sim_b, sys_b, _) = fresh()
+    sys_b.run_rounds(3)
+    sys_b.global_params = restored            # checkpoint swap-in
+    r_b = sys_b.run_round(3)
+    assert _digest(sys_a.global_params) == _digest(sys_b.global_params)
+    assert r_a.arrived == r_b.arrived

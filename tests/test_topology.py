@@ -1,0 +1,305 @@
+"""Topology engine: registry, star bit-identity, hier and gossip semantics.
+
+The load-bearing test is ``test_star_bit_identical_to_historical_wiring``:
+it hand-rolls the exact pre-topology ``build_fleet`` body and asserts the
+topology-engine path produces byte-identical global params and an
+identical simulator stats digest — the same guarantee the 24 pinned
+orchestrator-equivalence digests give at the scheduler level.
+"""
+
+import dataclasses
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.fleet import (ConsensusObjective, FleetConfig, build_fleet,
+                              links_for, sample_profiles)
+from repro.core.rounds import (FederatedSystem, FLClient, FLConfig,
+                               TransportConfig)
+from repro.core.simulator import Simulator
+from repro.core.topology import (GossipTopology, HierSystem, StarTopology,
+                                 Topology, available_topologies,
+                                 edge_client_addr, edge_server_addr,
+                                 make_topology, neighbor_graph,
+                                 register_topology, topology_hops)
+from repro.core.wire import WireError, parse_hop_specs
+
+
+def _params_digest(params) -> str:
+    return hashlib.sha256(
+        np.asarray(params["w"], np.float32).tobytes()).hexdigest()
+
+
+def _build(topology, n=16, rounds=3, seed=7, fl_cfg=None, **kw):
+    obj = ConsensusObjective(n, 48, seed=3)
+    fleet = FleetConfig(n_clients=n, seed=seed, topology=topology, **kw)
+    sim, system, profiles = build_fleet(
+        fleet, obj.init_params(), lambda i, p: obj.train_fn(i, p),
+        fl_cfg or FLConfig(transport=TransportConfig(kind="mudp")))
+    results = system.run_rounds(rounds)
+    return obj, sim, system, results
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+def test_registry_lists_builtins():
+    assert available_topologies() == ["gossip", "hier", "star"]
+    assert isinstance(make_topology("star"), StarTopology)
+
+
+def test_registry_unknown_name():
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("mesh")
+
+
+def test_registry_refuses_silent_shadowing():
+    with pytest.raises(ValueError, match="already registered"):
+        register_topology("star", StarTopology)
+
+
+def test_topology_hops():
+    assert topology_hops("star") == ("client->server", "server->client")
+    assert "edge->root" in topology_hops("hier")
+    assert topology_hops("gossip") == ("peer->peer",)
+
+
+# --------------------------------------------------------------------------
+# Per-hop wire spec parsing
+# --------------------------------------------------------------------------
+def test_parse_hop_specs():
+    out = parse_hop_specs(
+        "client->edge: topk(0.01)|int8(1024); edge->root: delta",
+        known_hops=topology_hops("hier"))
+    assert out == {"client->edge": "topk(0.01)|int8(1024)",
+                   "edge->root": "delta"}
+
+
+@pytest.mark.parametrize("spec", [
+    "",                                     # empty
+    "client->edge",                         # no pipeline
+    "client->edge: raw; client->edge: hex",  # duplicate hop
+    "client->edge: not_a_stage",            # bad pipeline
+    "nope->where: raw",                     # unknown hop
+])
+def test_parse_hop_specs_rejects(spec):
+    with pytest.raises(WireError):
+        parse_hop_specs(spec, known_hops=topology_hops("hier"))
+
+
+# --------------------------------------------------------------------------
+# star: bit-identical to the historical wiring
+# --------------------------------------------------------------------------
+def test_star_bit_identical_to_historical_wiring():
+    n, rounds = 12, 3
+    obj = ConsensusObjective(n, 48, seed=3)
+    fleet = FleetConfig(n_clients=n, seed=7)
+    base_cfg = FLConfig(transport=TransportConfig(kind="mudp"))
+
+    # The exact pre-topology-engine build_fleet body.
+    profiles = sample_profiles(fleet)
+    fl_cfg = dataclasses.replace(
+        base_cfg,
+        participation_fraction=fleet.participation_fraction,
+        min_participants=fleet.min_participants,
+        participation_seed=fleet.seed,
+        round_deadline_ns=fleet.round_deadline_ns,
+        mode=fleet.mode,
+        buffer_k=fleet.buffer_k)
+    sim_old = Simulator(engine=fleet.engine)
+    clients = []
+    for i, p in enumerate(profiles):
+        up, down = links_for(p)
+        sim_old.connect(p.addr, fleet.server_addr, up, down)
+        clients.append(FLClient(p.addr, obj.train_fn(i, p),
+                                train_time_ns=p.train_time_ns,
+                                weight=p.weight, cadence_ns=p.cadence_ns))
+    old = FederatedSystem(sim_old, fleet.server_addr, clients,
+                          obj.init_params(), fl_cfg)
+    old_results = old.run_rounds(rounds)
+
+    sim_new, new, _ = build_fleet(fleet, obj.init_params(),
+                                  lambda i, p: obj.train_fn(i, p), base_cfg)
+    new_results = new.run_rounds(rounds)
+
+    assert _params_digest(new.global_params) == \
+        _params_digest(old.global_params)
+    assert sim_new.stats_digest() == sim_old.stats_digest()
+    for a, b in zip(old_results, new_results):
+        assert (a.arrived, a.failed, a.bytes_sent, a.duration_ns) == \
+            (b.arrived, b.failed, b.bytes_sent, b.duration_ns)
+
+
+def test_star_hop_counters_cover_all_traffic():
+    _, sim, _, _ = _build("star")
+    assert set(sim.hop_bytes) == {"client->server", "server->client"}
+    assert sum(sim.hop_bytes.values()) == sim.stats["bytes_sent"]
+    assert sum(sim.hop_packets.values()) == sim.stats["packets_sent"]
+
+
+# --------------------------------------------------------------------------
+# hier: edge aggregation
+# --------------------------------------------------------------------------
+def test_hier_matches_star_final_model():
+    obj_s, _, star, _ = _build("star", n=16)
+    obj_h, _, hier, _ = _build("hier", n=16, cells=4)
+    np.testing.assert_allclose(hier.global_params["w"],
+                               star.global_params["w"],
+                               rtol=1e-5, atol=1e-6)
+    assert abs(obj_h.loss(hier.global_params)
+               - obj_s.loss(star.global_params)) < 1e-6
+
+
+def test_hier_root_link_smaller_than_star():
+    _, sim_s, _, _ = _build("star", n=16)
+    _, sim_h, _, _ = _build("hier", n=16, cells=4)
+    assert sim_h.hop_bytes["edge->root"] < sim_s.hop_bytes["client->server"]
+    assert set(sim_h.hop_bytes) == {"client->edge", "edge->client",
+                                    "edge->root", "root->edge"}
+    assert sum(sim_h.hop_bytes.values()) == sim_h.stats["bytes_sent"]
+
+
+def test_hier_cell_assignment_round_robin():
+    fleet = FleetConfig(n_clients=10, topology="hier", cells=3)
+    assert [fleet.cell_of(i) for i in range(6)] == [0, 1, 2, 0, 1, 2]
+    _, _, hier, _ = _build("hier", n=10, cells=3, rounds=1)
+    assert isinstance(hier, HierSystem)
+    sizes = sorted(len(e.core.pool.clients) for e in hier.edges)
+    assert sizes == [3, 3, 4]
+    # Every client is in exactly one cell, and edge_for finds it.
+    for e in hier.edges:
+        for addr in e.core.pool.clients:
+            assert hier.edge_for(addr) is e
+
+
+def test_hier_addresses_are_dual_plane():
+    _, sim, hier, _ = _build("hier", n=8, cells=2, rounds=1)
+    for m, e in enumerate(hier.edges):
+        assert e.addr == edge_client_addr(m)
+        assert e.server_addr == edge_server_addr(m)
+        assert e.addr != e.server_addr
+
+
+def test_hier_per_cell_histories_advance():
+    _, _, hier, results = _build("hier", n=16, cells=4, rounds=3)
+    assert len(results) == 3
+    for e in hier.edges:
+        assert len(e.core.history) == 3
+
+
+def test_hier_async_root():
+    _, sim, hier, results = _build(
+        "hier", n=16, cells=4, rounds=3, mode="async", buffer_k=4,
+        round_deadline_ns=120_000_000_000)
+    assert len(results) == 3
+    assert sim.hop_bytes["edge->root"] > 0
+
+
+def test_hier_cell_scheduler_refuses_direct_drive():
+    _, _, hier, _ = _build("hier", n=8, cells=2, rounds=1)
+    with pytest.raises(RuntimeError, match="parent tier"):
+        hier.edges[0].scheduler.run_round()
+
+
+def test_hier_per_hop_pipeline_specs():
+    _, sim, hier, _ = _build(
+        "hier", n=16, cells=4,
+        hops="client->edge: int8(48); edge->root: raw")
+    plain = _build("hier", n=16, cells=4)[1]
+    # int8 quantization (block sized to the model) shrinks the cell uplink
+    # vs the raw float default.
+    assert sim.hop_bytes["client->edge"] < plain.hop_bytes["client->edge"]
+
+
+# --------------------------------------------------------------------------
+# gossip: serverless
+# --------------------------------------------------------------------------
+def test_neighbor_graph_connected_and_seeded():
+    adj = neighbor_graph(20, 4, seed=1)
+    assert adj == neighbor_graph(20, 4, seed=1)
+    assert all(len(a) >= 4 for a in adj)
+    assert all(i not in adj[i] for i in range(20))
+    # Symmetry.
+    for i in range(20):
+        for j in adj[i]:
+            assert i in adj[j]
+    # Ring edges guarantee connectivity.
+    seen, stack = {0}, [0]
+    while stack:
+        for j in adj[stack.pop()]:
+            if j not in seen:
+                seen.add(j)
+                stack.append(j)
+    assert len(seen) == 20
+
+
+def test_gossip_has_zero_server_nodes():
+    fleet_server = FleetConfig(n_clients=12, topology="gossip",
+                               neighbors=3).server_addr
+    _, sim, system, results = _build("gossip", n=12, neighbors=3)
+    assert fleet_server not in sim._nodes
+    assert set(sim.hop_bytes) == {"peer->peer"}
+    assert sim.hop_bytes["peer->peer"] == sim.stats["bytes_sent"]
+    assert results[-1].metrics["neighbors_mean"] > 0
+
+
+def test_gossip_converges_and_is_deterministic():
+    obj1, _, s1, _ = _build("gossip", n=12, neighbors=3, rounds=4)
+    obj2, _, s2, _ = _build("gossip", n=12, neighbors=3, rounds=4)
+    assert _params_digest(s1.global_params) == _params_digest(s2.global_params)
+    initial = obj1.loss({"w": np.zeros(48, np.float32)})
+    assert obj1.loss(s1.global_params) < 0.5 * initial
+
+
+def test_gossip_rejects_delta_pipelines():
+    obj = ConsensusObjective(8, 16, seed=0)
+    fleet = FleetConfig(n_clients=8, topology="gossip", neighbors=2,
+                        hops="peer->peer: delta|int8(1024)")
+    with pytest.raises(ValueError, match="delta|weight-domain"):
+        build_fleet(fleet, obj.init_params(),
+                    lambda i, p: obj.train_fn(i, p),
+                    FLConfig(transport=TransportConfig(kind="mudp")))
+
+
+# --------------------------------------------------------------------------
+# FleetConfig validation (fail at construction, not deep in build)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("kw,match", [
+    (dict(topology="mesh"), "unknown topology"),
+    (dict(topology="hier", cells=0), "cells"),
+    (dict(topology="hier", cells=17), "cannot exceed"),
+    (dict(topology="hier", edge_cohort="dialup"), "edge_cohort"),
+    (dict(topology="hier", cell_transport="pigeon"), "transport"),
+    (dict(topology="gossip", neighbors=0), "degree"),
+    (dict(topology="gossip", neighbors=16), "must be <"),
+    (dict(hops="client->server: bogus_stage"), "invalid hops"),
+    (dict(hops="peer->peer: raw"), "invalid hops"),   # not a star hop
+    (dict(hops="client->server: raw", uplink="raw"), "two spellings"),
+    (dict(n_clients=0), "n_clients"),
+])
+def test_fleetconfig_validation(kw, match):
+    base = dict(n_clients=16)
+    base.update(kw)
+    with pytest.raises(ValueError, match=match):
+        FleetConfig(**base)
+
+
+def test_custom_topology_plugs_in():
+    class NullTopology(Topology):
+        name = "null"
+        hops = ()
+
+        def build(self, fleet, profiles, global_params, train_fn_factory,
+                  fl_cfg):
+            return Simulator(), None
+
+    register_topology("null", NullTopology, overwrite=True)
+    try:
+        fleet = FleetConfig(n_clients=2, topology="null")
+        sim, system, profiles = build_fleet(fleet, {"w": np.zeros(4)},
+                                            lambda i, p: None)
+        assert system is None and len(profiles) == 2
+    finally:
+        import repro.core.topology as topo_mod
+        del topo_mod._REGISTRY["null"]
