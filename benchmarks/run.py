@@ -14,7 +14,7 @@ import time
 from benchmarks import (aggregation, async_vs_sync, codecs, fl_convergence,
                         fleet_scale, kernels_bench, roofline, simcore,
                         topology_bench, transport_comparison,
-                        transport_scenarios, wire_bench)
+                        transport_scenarios, vmap_train, wire_bench)
 
 SUITES = {
     "simcore": simcore,
@@ -29,6 +29,7 @@ SUITES = {
     "aggregation": aggregation,
     "kernels": kernels_bench,
     "roofline": roofline,
+    "vmap_train": vmap_train,
 }
 
 

@@ -21,18 +21,25 @@ drops the server entirely and lets peers exchange updates at degree
 time-to-target-loss, so the hierarchy's root-link savings are visible in
 the same breath as its convergence.
 
+``--model`` swaps what the clients train (``repro.core.client_compute``):
+``consensus`` is the analytic objective above, ``mlp`` trains the MNIST
+MLP on non-IID dirichlet shards (offline: a seeded synthetic digit set)
+and prints test accuracy per round.  ``--train-backend vmap`` batches
+every round's local training into one ``jax.vmap`` call — identical
+rounds, a fraction of the wall time.
+
   PYTHONPATH=src python examples/fleet_sim.py
   PYTHONPATH=src python examples/fleet_sim.py --mode async
   PYTHONPATH=src python examples/fleet_sim.py --topology hier --cells 6
-  PYTHONPATH=src python examples/fleet_sim.py --topology gossip --mode sync
+  PYTHONPATH=src python examples/fleet_sim.py --model mlp --train-backend vmap
 """
 
 from __future__ import annotations
 
 import argparse
 
-from repro.core import (ConsensusObjective, FLConfig, FleetConfig,
-                        TransportConfig, build_fleet, cohort_counts)
+from repro.core import (FLConfig, FleetConfig, TransportConfig,
+                        build_fleet_training, cohort_counts)
 
 N_CLIENTS = 48
 ROUNDS = {"sync": 3, "async": 12}      # ~comparable simulated horizons
@@ -41,24 +48,27 @@ NS = 1_000_000_000
 
 
 def run(transport: str, mode: str, topology: str = "star", cells: int = 4,
-        neighbors: int = 4) -> None:
+        neighbors: int = 4, model: str = "consensus",
+        train_backend: str = "python") -> None:
     fleet = FleetConfig(n_clients=N_CLIENTS, seed=7, mode=mode, buffer_k=8,
                         round_deadline_ns=4 * NS, topology=topology,
-                        cells=cells, neighbors=neighbors)
-    objective = ConsensusObjective(N_CLIENTS, 1024, seed=7)
+                        cells=cells, neighbors=neighbors,
+                        model=model, train_backend=train_backend)
     cfg = FLConfig(aggregation="fedavg",
                    transport=TransportConfig(kind=transport,
                                              timeout_ns=2 * NS,
                                              udp_deadline_ns=3 * NS))
-    sim, system, profiles = build_fleet(fleet, objective.init_params(),
-                                        objective.train_fn, cfg)
+    build = build_fleet_training(fleet, cfg)
+    sim, system, profiles = build.sim, build.system, build.profiles
+    objective = build.model
     loss0 = objective.loss(system.global_params)
     target = TARGET_FRAC * loss0
     crossed_ns = [None]
 
     shape = {"star": "star", "hier": f"hier x{fleet.cells} cells",
              "gossip": f"gossip k={fleet.neighbors}"}[topology]
-    print(f"\n=== {transport} / {mode} / {shape}: {N_CLIENTS} clients, "
+    print(f"\n=== {transport} / {mode} / {shape} / {model}"
+          f"[{train_backend}]: {N_CLIENTS} clients, "
           f"cohorts {cohort_counts(profiles)} ===")
 
     def on_round(res, params):
@@ -66,17 +76,23 @@ def run(transport: str, mode: str, topology: str = "star", cells: int = 4,
         if crossed_ns[0] is None and loss <= target:
             crossed_ns[0] = sim.now_ns
         cut = sorted(set(res.roster) - set(res.arrived) - set(res.failed))
+        acc = (f" | acc {objective.accuracy(params):.3f}"
+               if hasattr(objective, "accuracy") else "")
         print(f"round {res.round_idx}: sampled {len(res.roster):2d} | "
               f"arrived {len(res.arrived):2d} | in-flight/cut {len(cut):2d} "
               f"| late-folded {res.late_folded} | "
               f"retx {res.retransmissions:3d} | "
               f"{res.bytes_sent / 1e6:.2f} MB on wire | "
-              f"loss {loss:.4f}")
+              f"loss {loss:.4f}{acc}")
 
     system.on_round_end = on_round
     system.run_rounds(ROUNDS[mode])
     hops = " | ".join(f"{hop} {b / 1e6:.2f} MB"
                       for hop, b in sorted(sim.hop_bytes.items()))
+    if build.trainer is not None:
+        sizes = build.trainer.batch_sizes
+        print(f"    [{train_backend}] {sum(sizes)} client-trainings in "
+              f"{len(sizes)} batched calls (sizes {sizes})")
     if crossed_ns[0] is not None:
         print(f"--> {mode} time-to-target-loss ({TARGET_FRAC:.0%} of L0): "
               f"{crossed_ns[0] / 1e9:.2f} simulated seconds  [{hops}]")
@@ -99,6 +115,15 @@ def main() -> None:
                     help="hier only: number of edge aggregators")
     ap.add_argument("--neighbors", type=int, default=4,
                     help="gossip only: target peer degree")
+    ap.add_argument("--model", default="consensus",
+                    choices=["consensus", "mlp"],
+                    help="what the clients train: the analytic consensus "
+                         "objective or the MNIST MLP on non-IID shards")
+    ap.add_argument("--train-backend", default="python",
+                    choices=["python", "vmap", "shard"],
+                    help="how local training executes: per-client loop, "
+                         "one vmapped batch per round, or vmap sharded "
+                         "over the device mesh")
     args = ap.parse_args()
     modes = ["sync", "async"] if args.mode == "both" else [args.mode]
     if args.topology == "gossip":
@@ -106,7 +131,8 @@ def main() -> None:
     for transport in ("mudp", "udp"):
         for mode in modes:
             run(transport, mode, topology=args.topology, cells=args.cells,
-                neighbors=args.neighbors)
+                neighbors=args.neighbors, model=args.model,
+                train_backend=args.train_backend)
     print("\nSame seed, same cohorts — transport, scheduling, and wiring "
           "are the only variables. MUDP recovers every update where UDP's "
           "zero-filled gaps keep the loss high; the async server stops "

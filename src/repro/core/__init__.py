@@ -10,7 +10,14 @@ future-work optimization).  See ``docs/TRANSPORTS.md`` for the contract and
 a write-your-own walkthrough.
 """
 
-from repro.core.aggregation import fedavg, pairwise_average, trimmed_mean
+from repro.core.aggregation import (fedavg, fedavg_stack, pairwise_average,
+                                    trimmed_mean)
+from repro.core.client_compute import (BatchTrainer, ClientModel,
+                                       ConsensusModel, TrainBackend,
+                                       attach_trainer, available_models,
+                                       available_train_backends, make_model,
+                                       make_train_backend, register_model,
+                                       register_train_backend)
 from repro.core.channel import (BernoulliLoss, DropList, GilbertElliott, Link,
                                 LossModel, NoLoss, keyed_uniform,
                                 keyed_uniforms, packet_key_arrays,
@@ -20,7 +27,8 @@ from repro.core.compression import (Codec, HexCodec, Int8Codec, RawCodec,
 from repro.core.fec import (FecMudpReceiver, FecMudpSender, FecMudpTransport,
                             parity_groups)
 from repro.core.fleet import (COHORT_PRESETS, ClientProfile, CohortSpec,
-                              ConsensusObjective, FleetConfig, build_fleet,
+                              ConsensusObjective, FleetBuild, FleetConfig,
+                              build_fleet, build_fleet_training,
                               cohort_counts, links_for, profiles_digest,
                               sample_profiles)
 from repro.core.mudp import MudpReceiver, MudpSender, TxnStats
@@ -56,15 +64,19 @@ from repro.core.wire import (CodecStage, DeltaStage, ErrorFeedbackStage,
                              stage_for_codec)
 
 __all__ = [
-    "fedavg", "pairwise_average", "trimmed_mean",
+    "fedavg", "fedavg_stack", "pairwise_average", "trimmed_mean",
+    "BatchTrainer", "ClientModel", "ConsensusModel", "TrainBackend",
+    "attach_trainer", "available_models", "available_train_backends",
+    "make_model", "make_train_backend", "register_model",
+    "register_train_backend",
     "BernoulliLoss", "DropList", "GilbertElliott", "Link", "LossModel",
     "NoLoss", "keyed_uniform", "keyed_uniforms", "packet_key_arrays",
     "DCN_LINK", "PAPER_LINK", "WAN_LINK",
     "Codec", "HexCodec", "Int8Codec", "RawCodec", "TopKCodec", "make_codec",
     "FecMudpReceiver", "FecMudpSender", "FecMudpTransport", "parity_groups",
     "COHORT_PRESETS", "ClientProfile", "CohortSpec", "ConsensusObjective",
-    "FleetConfig", "build_fleet", "cohort_counts", "links_for",
-    "profiles_digest", "sample_profiles",
+    "FleetBuild", "FleetConfig", "build_fleet", "build_fleet_training",
+    "cohort_counts", "links_for", "profiles_digest", "sample_profiles",
     "MudpReceiver", "MudpSender", "TxnStats",
     "Packetizer", "flatten_to_vector", "packetize", "reassemble",
     "unflatten_from_vector",

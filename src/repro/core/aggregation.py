@@ -96,6 +96,47 @@ def fedavg(trees: Sequence[Any], weights: Optional[Sequence[float]] = None,
     return jax.tree_util.tree_map(_avg, *trees)
 
 
+def fedavg_stack(stack: np.ndarray,
+                 weights: Optional[Sequence[float]] = None,
+                 backend: str = "numpy") -> np.ndarray:
+    """Weighted FedAvg over a flat update stack ``(K, P) -> (P,)``.
+
+    The batched twin of :func:`fedavg`, used by the orchestrator now that
+    contributions arrive as flat wire vectors: one accumulation over the
+    stack and a single unflatten replaces K per-leaf tree folds.  The
+    ``"numpy"`` path accumulates ``acc += w_i * row_i`` in the same order
+    and dtype as the tree path — elementwise ops on a concatenation equal
+    the ops on its slices, so it is **bit-identical** to per-leaf
+    accumulation and digest-safe.  ``"kernel"``/``"auto"`` route to the
+    fused Pallas kernel (``fedavg_flat``), ~1 ULP off and therefore never
+    the default (``tests/test_kernel_parity.py`` pins both claims).
+    """
+    stack = np.asarray(stack, dtype=np.float32)
+    if stack.ndim != 2 or stack.shape[0] == 0:
+        raise ValueError(f"fedavg_stack needs a non-empty (K, P) stack, "
+                         f"got shape {stack.shape}")
+    if backend not in FEDAVG_BACKENDS:
+        raise ValueError(f"unknown fedavg backend {backend!r}; "
+                         f"one of {FEDAVG_BACKENDS}")
+    if backend != "numpy":
+        ops = _kernel_ops()
+        if ops is not None:
+            ws = ([1.0] * stack.shape[0] if weights is None
+                  else [float(w) for w in weights])
+            return np.asarray(ops.fedavg_flat(stack, ws), dtype=np.float32)
+        if backend == "kernel":
+            raise RuntimeError("fedavg backend='kernel' requested but the "
+                               "Pallas kernel is not importable (no jax?)")
+    if weights is None:
+        weights = [1.0] * stack.shape[0]
+    w = np.asarray(weights, dtype=np.float32)
+    w = w / w.sum()
+    acc = np.zeros(stack.shape[1], dtype=np.float32)
+    for wi, row in zip(w, stack):
+        acc += wi * row
+    return acc
+
+
 def trimmed_mean(trees: Sequence[Any], trim_fraction: float = 0.1) -> Any:
     """Coordinate-wise trimmed mean — robust to Byzantine/outlier clients."""
     k = int(len(trees) * trim_fraction)

@@ -1,0 +1,461 @@
+"""Vectorized client compute: batched local training behind a registry.
+
+Every fleet round used to optimize its objective client-by-client in a
+Python loop (``FLClient.train_fn`` called once per session timer).  This
+module batches the *client dimension* instead:
+
+* :class:`ClientModel` — a registered model family
+  (``register_model`` / ``make_model`` / ``available_models``) that can
+  train one client the legacy way (``train_fn(i)`` — a per-client callable,
+  bit-identical to the historical path) **and** as a pure, vmappable JAX
+  function over a flat parameter vector (``jax_train``).  Built-ins:
+  ``"consensus"`` (the analytic quadratic objective the fleet benchmarks
+  always used) and ``"mlp"`` (the paper's MNIST MLP —
+  ``repro.models.mlp`` over ``repro.data.mnist`` non-IID dirichlet shards).
+* :class:`TrainBackend` — how a batch of pending training steps executes
+  (``register_train_backend`` / ``make_train_backend``):
+  ``"python"`` loops the per-client callables (today's path), ``"vmap"``
+  runs one ``jax.jit(jax.vmap(...))`` call over the stacked batch,
+  ``"shard"`` additionally ``shard_map``s the batch over the local device
+  mesh (``repro.distributed.fl_mesh.client_mesh``) and falls back to vmap
+  on a single device.
+* :class:`BatchTrainer` — the orchestrator glue.  ``ServerCore`` (and the
+  hierarchical :class:`~repro.core.topology.CellScheduler` cells through
+  their nested cores, and :class:`~repro.core.topology.GossipSystem`)
+  *submit* a session's training input the moment its model is delivered
+  and *collect* the result when the session's training timer fires.
+  Because local training is deterministic and per-client independent, the
+  trainer may compute any pending set in one batched call without
+  changing a single event: the first timer to fire flushes everything
+  submitted so far — in a typical round that is the whole roster, so K
+  clients train as one vmapped batch while the simulator still observes
+  per-client completion times.
+
+The default path is untouched: with no trainer attached,
+``ServerCore.schedule_training`` runs the exact historical per-client
+code, pinned by the 24 orchestrator-equivalence digests.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.packetizer import flatten_to_vector, unflatten_from_vector
+
+
+# --------------------------------------------------------------------------
+# The model contract + registry
+# --------------------------------------------------------------------------
+class ClientModel(abc.ABC):
+    """A model family the fleet can train: per-client or batched.
+
+    Implementations expose the *same* local training step two ways, and
+    ``tests/test_client_compute.py`` pins that they agree (bit-identical
+    for the python loop vs itself; ULP-bounded python-vs-vmap):
+
+    * :meth:`train_fn` — ``(params_tree, round_idx, client) -> (tree,
+      metrics)``, the historical per-client callable handed to
+      :class:`~repro.core.server.FLClient`.
+    * :meth:`jax_train` — ``(flat_vec, client_idx, round_idx) ->
+      (flat_vec', aux)``, pure and vmappable over all three arguments
+      (``aux`` is a dict of scalar training metrics).
+    """
+
+    name: str = "abstract"
+
+    def __init__(self, n_clients: int, *, seed: int = 0):
+        self.n_clients = int(n_clients)
+        self.seed = int(seed)
+
+    @abc.abstractmethod
+    def init_params(self) -> Any:
+        """The global model template (numpy pytree, float32 leaves)."""
+
+    @abc.abstractmethod
+    def loss(self, params: Any) -> float:
+        """Global objective value (lower is better)."""
+
+    def eval_metrics(self, params: Any) -> dict:
+        """Benchmark-facing evaluation record (subclasses extend)."""
+        return {"loss": self.loss(params)}
+
+    @abc.abstractmethod
+    def train_fn(self, i: int, profile: Any = None) -> Callable:
+        """The i-th client's legacy per-client training callable."""
+
+    @abc.abstractmethod
+    def jax_train(self, vec, client_idx, round_idx):
+        """One client's local training as a pure JAX function."""
+
+
+_MODELS: dict[str, Callable[..., ClientModel]] = {}
+
+
+def register_model(name: str, factory: Callable[..., ClientModel], *,
+                   overwrite: bool = False) -> None:
+    """Register a model factory (the transport/topology registry idiom:
+    silent shadowing of a built-in would invalidate benchmarks)."""
+    if not overwrite and name in _MODELS:
+        raise ValueError(f"model {name!r} is already registered "
+                         f"(pass overwrite=True to replace it)")
+    _MODELS[name] = factory
+
+
+def make_model(name: str, n_clients: int, *, seed: int = 0,
+               **kwargs) -> ClientModel:
+    try:
+        factory = _MODELS[name]
+    except KeyError:
+        raise ValueError(f"unknown model {name!r}; registered models: "
+                         f"{available_models()}") from None
+    return factory(n_clients, seed=seed, **kwargs)
+
+
+def available_models() -> list[str]:
+    return sorted(_MODELS)
+
+
+# --------------------------------------------------------------------------
+# Built-in model: the analytic consensus objective
+# --------------------------------------------------------------------------
+class ConsensusModel(ClientModel):
+    """:class:`~repro.core.fleet.ConsensusObjective` as a registered model.
+
+    The python path delegates to the objective's own ``train_fn`` — the
+    byte-for-byte historical fleet workload — while :meth:`jax_train`
+    expresses the same ``w + lr * (c_k - w)`` step over the stacked target
+    matrix for the vmap/shard backends.
+    """
+
+    name = "consensus"
+
+    def __init__(self, n_clients: int, *, seed: int = 0,
+                 n_params: int = 1024, lr: float = 0.5,
+                 heterogeneity: float = 0.1):
+        from repro.core.fleet import ConsensusObjective
+        super().__init__(n_clients, seed=seed)
+        self.objective = ConsensusObjective(
+            n_clients, n_params, seed=seed, lr=lr, heterogeneity=heterogeneity)
+
+    def init_params(self) -> Any:
+        return self.objective.init_params()
+
+    def loss(self, params: Any) -> float:
+        return self.objective.loss(params)
+
+    def train_fn(self, i: int, profile: Any = None) -> Callable:
+        return self.objective.train_fn(i, profile)
+
+    def jax_train(self, vec, client_idx, round_idx):
+        import jax.numpy as jnp
+        targets = jnp.asarray(self.objective.targets)
+        target = targets[client_idx]
+        w = vec.astype(jnp.float32)
+        new = w + jnp.float32(self.objective.lr) * (target - w)
+        return new, {"local_gap": jnp.mean((w - target) ** 2)}
+
+
+register_model("consensus", ConsensusModel)
+
+
+def _mlp_factory(n_clients: int, *, seed: int = 0, **kwargs) -> ClientModel:
+    # Lazy: repro.models.mlp imports jax at module load; keep that off the
+    # critical import path of the pure-simulator layers.
+    from repro.models.mlp import MnistMLPModel
+    return MnistMLPModel(n_clients, seed=seed, **kwargs)
+
+
+register_model("mlp", _mlp_factory)
+
+
+# --------------------------------------------------------------------------
+# Train backends
+# --------------------------------------------------------------------------
+class TrainBackend(abc.ABC):
+    """Executes a batch of independent local-training steps.
+
+    ``train(model, stack, client_idx, round_idx)`` takes the K pending
+    steps as a stacked float32 matrix ``(K, n_params)`` plus int32 vectors
+    of client indices and round numbers, and returns ``(new_stack,
+    metrics)`` where ``metrics`` is one dict per row.
+    """
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def train(self, model: ClientModel, stack: np.ndarray,
+              client_idx: np.ndarray, round_idx: np.ndarray
+              ) -> tuple[np.ndarray, list[dict]]:
+        ...
+
+
+class PythonLoopBackend(TrainBackend):
+    """Today's path: one ``train_fn`` call per client, in batch order.
+
+    Bit-identical to the historical per-session training (it calls the
+    very same callables), which is why it is the default everywhere the
+    replay digests are pinned.
+    """
+
+    name = "python"
+
+    def __init__(self) -> None:
+        self._fns: dict[tuple[int, int], Callable] = {}
+        self._template: dict[int, Any] = {}
+
+    def _fn(self, model: ClientModel, i: int) -> Callable:
+        key = (id(model), i)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = model.train_fn(i)
+        return fn
+
+    def train(self, model, stack, client_idx, round_idx):
+        template = self._template.get(id(model))
+        if template is None:
+            template = self._template[id(model)] = model.init_params()
+        out = np.empty_like(stack)
+        metrics: list[dict] = []
+        for j in range(stack.shape[0]):
+            tree = unflatten_from_vector(stack[j], template)
+            new_tree, m = self._fn(model, int(client_idx[j]))(
+                tree, int(round_idx[j]), None)
+            out[j] = flatten_to_vector(new_tree)
+            metrics.append(m)
+        return out, metrics
+
+
+def _aux_to_rows(aux: dict, k: int) -> list[dict]:
+    """Split a dict of (K,)-arrays into K per-row metric dicts."""
+    rows: list[dict] = []
+    for j in range(k):
+        rows.append({key: float(np.asarray(val)[j])
+                     for key, val in aux.items()})
+    return rows
+
+
+def _next_pow2(k: int) -> int:
+    return 1 << max(0, (k - 1).bit_length())
+
+
+class VmapBackend(TrainBackend):
+    """One ``jax.jit(jax.vmap(model.jax_train))`` call per flush.
+
+    Batches are padded to the next power of two (duplicating the last
+    row; padded outputs are discarded) so a fleet with varying roster
+    sizes compiles O(log K) programs instead of one per distinct K.
+    """
+
+    name = "vmap"
+
+    def __init__(self) -> None:
+        self._jitted: dict[int, Callable] = {}
+
+    def _batched(self, model: ClientModel) -> Callable:
+        fn = self._jitted.get(id(model))
+        if fn is None:
+            import jax
+            fn = self._jitted[id(model)] = jax.jit(jax.vmap(model.jax_train))
+        return fn
+
+    def train(self, model, stack, client_idx, round_idx):
+        import jax.numpy as jnp
+        k = stack.shape[0]
+        kp = _next_pow2(k)
+        if kp != k:
+            pad = kp - k
+            stack = np.concatenate([stack, np.repeat(stack[-1:], pad, 0)])
+            client_idx = np.concatenate(
+                [client_idx, np.repeat(client_idx[-1:], pad)])
+            round_idx = np.concatenate(
+                [round_idx, np.repeat(round_idx[-1:], pad)])
+        new, aux = self._batched(model)(
+            jnp.asarray(stack, jnp.float32),
+            jnp.asarray(client_idx, jnp.int32),
+            jnp.asarray(round_idx, jnp.int32))
+        out = np.asarray(new, np.float32)[:k]
+        return out, _aux_to_rows(aux, k)
+
+
+class ShardBackend(VmapBackend):
+    """vmap sharded over the local device mesh (``clients`` axis).
+
+    With one device (the CI case) this is exactly :class:`VmapBackend`;
+    with D devices the padded batch is split D ways via ``shard_map`` so
+    each device trains K/D clients.
+    """
+
+    name = "shard"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._sharded: dict[int, Callable] = {}
+
+    def _batched(self, model: ClientModel) -> Callable:
+        import jax
+        if jax.device_count() <= 1:
+            return super()._batched(model)
+        fn = self._sharded.get(id(model))
+        if fn is None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.fl_mesh import client_mesh
+            mesh = client_mesh()
+            vmapped = jax.vmap(model.jax_train)
+            spec = P("clients")
+            fn = self._sharded[id(model)] = jax.jit(shard_map(
+                vmapped, mesh=mesh,
+                in_specs=(spec, spec, spec),
+                out_specs=(spec, spec),
+                check_rep=False))
+        return fn
+
+    def train(self, model, stack, client_idx, round_idx):
+        import jax
+        d = jax.device_count()
+        if d <= 1:
+            return super().train(model, stack, client_idx, round_idx)
+        # Pad to a device multiple (shard_map needs an even split), then
+        # reuse the pow2 padding inside the parent for jit stability.
+        k = stack.shape[0]
+        kp = max(d, _next_pow2(k))
+        kp = -(-kp // d) * d
+        if kp != k:
+            pad = kp - k
+            stack = np.concatenate([stack, np.repeat(stack[-1:], pad, 0)])
+            client_idx = np.concatenate(
+                [client_idx, np.repeat(client_idx[-1:], pad)])
+            round_idx = np.concatenate(
+                [round_idx, np.repeat(round_idx[-1:], pad)])
+        import jax.numpy as jnp
+        new, aux = self._batched(model)(
+            jnp.asarray(stack, jnp.float32),
+            jnp.asarray(client_idx, jnp.int32),
+            jnp.asarray(round_idx, jnp.int32))
+        return np.asarray(new, np.float32)[:k], _aux_to_rows(aux, k)
+
+
+_TRAIN_BACKENDS: dict[str, Callable[[], TrainBackend]] = {}
+
+
+def register_train_backend(name: str, factory: Callable[[], TrainBackend],
+                           *, overwrite: bool = False) -> None:
+    if not overwrite and name in _TRAIN_BACKENDS:
+        raise ValueError(f"train backend {name!r} is already registered "
+                         f"(pass overwrite=True to replace it)")
+    _TRAIN_BACKENDS[name] = factory
+
+
+def make_train_backend(name: str) -> TrainBackend:
+    try:
+        factory = _TRAIN_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown train backend {name!r}; registered backends: "
+            f"{available_train_backends()}") from None
+    return factory()
+
+
+def available_train_backends() -> list[str]:
+    return sorted(_TRAIN_BACKENDS)
+
+
+register_train_backend("python", PythonLoopBackend)
+register_train_backend("vmap", VmapBackend)
+register_train_backend("shard", ShardBackend)
+
+
+# --------------------------------------------------------------------------
+# The orchestrator glue: submit at delivery, collect at the timer
+# --------------------------------------------------------------------------
+class BatchTrainer:
+    """Opportunistic batching without touching the event calendar.
+
+    A session's training *input* is fully known the moment its downlink
+    delivers (``ServerCore.schedule_training`` runs then); only the
+    *result* is deferred by ``train_time_ns``.  So the core submits the
+    input immediately and collects at the timer — and because every local
+    step is deterministic and independent, ``collect`` may flush all
+    currently-pending submissions as one backend call without perturbing
+    any event time or order.  In a sync round the whole roster's downlinks
+    usually land before the fastest client finishes training, so the first
+    ``collect`` trains the entire round in one vmapped batch; stragglers
+    whose models arrive later simply join the next flush.
+    """
+
+    def __init__(self, model: ClientModel, backend: TrainBackend,
+                 client_index: dict[str, int]):
+        self.model = model
+        self.backend = backend
+        self.client_index = dict(client_index)
+        self._template = model.init_params()
+        self._pending: list[tuple[Any, np.ndarray, int, int]] = []
+        self._results: dict[Any, tuple[Any, Any, dict]] = {}
+        #: Flush sizes, newest last — benchmarks read this to report how
+        #: much batching the event schedule actually allowed.
+        self.batch_sizes: list[int] = []
+
+    def submit(self, key: Any, addr: str, params_tree: Any,
+               round_idx: int) -> None:
+        """Register one session's training input (model just delivered)."""
+        if key in self._results:
+            raise RuntimeError(f"duplicate submit for session key {key!r}")
+        try:
+            idx = self.client_index[addr]
+        except KeyError:
+            raise KeyError(f"no model client index for {addr!r}") from None
+        self._pending.append((key, params_tree, idx, int(round_idx)))
+
+    def flush(self) -> None:
+        """Train every pending submission as one backend call."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        stack = np.stack([flatten_to_vector(tree) for _, tree, _, _ in
+                          pending]).astype(np.float32, copy=False)
+        client_idx = np.asarray([i for _, _, i, _ in pending], np.int32)
+        round_idx = np.asarray([r for _, _, _, r in pending], np.int32)
+        new_stack, metrics = self.backend.train(
+            self.model, stack, client_idx, round_idx)
+        self.batch_sizes.append(len(pending))
+        for j, (key, tree, _, _) in enumerate(pending):
+            new_tree = unflatten_from_vector(
+                np.asarray(new_stack[j], np.float32), self._template)
+            self._results[key] = (tree, new_tree, metrics[j])
+
+    def collect(self, key: Any) -> tuple[Any, Any, dict]:
+        """(received_tree, trained_tree, metrics) for a submitted key."""
+        if key not in self._results:
+            self.flush()
+        try:
+            return self._results.pop(key)
+        except KeyError:
+            raise KeyError(f"session key {key!r} was never submitted") from \
+                None
+
+
+def attach_trainer(system: Any, trainer: BatchTrainer) -> int:
+    """Wire ``trainer`` into every training site of a built system.
+
+    Returns the number of cores/systems wired: a star's single
+    ``ServerCore``, every hierarchical edge cell's nested core (the root
+    never trains — its "training" is the cell round), or the gossip
+    system itself.
+    """
+    from repro.core.rounds import FederatedSystem
+    from repro.core.topology import GossipSystem, HierSystem
+    if isinstance(system, FederatedSystem):
+        system.core.batch_trainer = trainer
+        return 1
+    if isinstance(system, HierSystem):
+        for edge in system.edges:
+            edge.core.batch_trainer = trainer
+        return len(system.edges)
+    if isinstance(system, GossipSystem):
+        system.batch_trainer = trainer
+        return 1
+    raise TypeError(f"don't know how to attach a trainer to "
+                    f"{type(system).__name__}")

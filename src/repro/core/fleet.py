@@ -190,6 +190,17 @@ class FleetConfig:
     # Hop names are the topology's (topology_hops(name)); mutually
     # exclusive with the uplink/downlink shorthands above.
     hops: Optional[str] = None
+    # What the clients train (repro.core.client_compute model registry):
+    # None keeps the caller-supplied train_fn_factory path (build_fleet);
+    # "consensus" | "mlp" lets build_fleet_training() construct the model
+    # and wire its per-client / batched training into the topology.
+    model: Optional[str] = None
+    model_args: Optional[dict] = None   # forwarded to the model factory
+    # How local training executes (client_compute TrainBackend registry):
+    # "python" = today's per-client loop (bit-identical, digest-pinned);
+    # "vmap" = one jitted jax.vmap call per pending batch; "shard" = vmap
+    # sharded over the local device mesh (falls back to vmap on 1 device).
+    train_backend: str = "python"
 
     def __post_init__(self) -> None:
         # Topology parameters fail at construction, not deep inside
@@ -233,6 +244,20 @@ class FleetConfig:
                                 known_hops=topology_hops(self.topology))
             except WireError as e:
                 raise ValueError(f"invalid hops spec: {e}") from None
+        # Model / train-backend wiring (lazy import: client_compute pulls
+        # in the model registry, heavy deps load only when asked for).
+        from repro.core.client_compute import (available_models,
+                                               available_train_backends)
+        if self.model is not None and self.model not in available_models():
+            raise ValueError(f"unknown model {self.model!r}; one of "
+                             f"{available_models()}")
+        if self.train_backend not in available_train_backends():
+            raise ValueError(
+                f"unknown train backend {self.train_backend!r}; one of "
+                f"{available_train_backends()}")
+        if self.model_args is not None and self.model is None:
+            raise ValueError("model_args= without model=: name the model "
+                             "the arguments configure")
 
     def cohort_specs(self) -> dict[str, CohortSpec]:
         return self.cohorts if self.cohorts is not None else COHORT_PRESETS
@@ -364,6 +389,46 @@ def build_fleet(fleet: FleetConfig, global_params: Any,
     sim, system = topo.build(fleet, profiles, global_params,
                              train_fn_factory, fl_cfg)
     return sim, system, profiles
+
+
+@dataclasses.dataclass
+class FleetBuild:
+    """Everything :func:`build_fleet_training` wired together."""
+
+    sim: Simulator
+    system: Any                      # Federated/Hier/GossipSystem
+    profiles: list[ClientProfile]
+    model: Any                       # the ClientModel instance
+    trainer: Optional[Any] = None    # BatchTrainer (None on "python")
+
+
+def build_fleet_training(fleet: FleetConfig,
+                         fl_cfg: Optional[FLConfig] = None) -> FleetBuild:
+    """:func:`build_fleet` with the model and train backend wired in.
+
+    The model named by ``fleet.model`` (default ``"consensus"``) supplies
+    the global template and every client's training; ``fleet.train_backend
+    != "python"`` additionally attaches a
+    :class:`~repro.core.client_compute.BatchTrainer` to every training
+    site, so each round's local steps run as one vmapped batch.  The
+    ``"python"`` default attaches nothing — the topology runs the exact
+    historical per-client path the replay digests pin.
+    """
+    from repro.core.client_compute import (BatchTrainer, attach_trainer,
+                                           make_model, make_train_backend)
+    model = make_model(fleet.model or "consensus", fleet.n_clients,
+                       seed=fleet.seed, **(fleet.model_args or {}))
+    sim, system, profiles = build_fleet(
+        fleet, model.init_params(),
+        lambda i, p: model.train_fn(i, p), fl_cfg)
+    trainer = None
+    if fleet.train_backend != "python":
+        trainer = BatchTrainer(
+            model, make_train_backend(fleet.train_backend),
+            client_index={p.addr: i for i, p in enumerate(profiles)})
+        attach_trainer(system, trainer)
+    return FleetBuild(sim=sim, system=system, profiles=profiles,
+                      model=model, trainer=trainer)
 
 
 def cohort_counts(profiles: list[ClientProfile]) -> dict[str, int]:

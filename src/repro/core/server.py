@@ -340,6 +340,12 @@ class ServerCore:
         # core an eventual send_update()/uplink_update() on the session (or
         # a session failure), exactly like the default path.
         self.train_override: Optional[Callable[[ClientSession], None]] = None
+        # Optional repro.core.client_compute.BatchTrainer: when attached,
+        # schedule_training submits each session's delivered model
+        # immediately and collects the (batched) result when its timer
+        # fires.  None = the historical per-client train_fn path, pinned
+        # by the replay digests.
+        self.batch_trainer: Optional[Any] = None
         # Session registries: uplink keyed by (client addr, txn_up) — the
         # server-side delivery identity — and downlink by (client addr,
         # txn_down) — the client-receiver identity.  Sync scheduling reuses
@@ -496,6 +502,26 @@ class ServerCore:
         session.state = TRAINING
         client = session.client
 
+        if self.batch_trainer is not None:
+            # The training input is fully known *now* (the model was just
+            # delivered); only the result is deferred by the timer.  Submit
+            # immediately so the trainer can run every pending session as
+            # one vmapped batch, and collect at the timer — the result is
+            # deterministic and per-client independent, so batching cannot
+            # perturb any event time or order.
+            trainer = self.batch_trainer
+            key = id(session)
+            trainer.submit(key, client.addr, client.params,
+                           session.round_idx)
+
+            def _batched_done() -> None:
+                received, new_params, metrics = trainer.collect(key)
+                client.metrics_history.append(metrics)
+                client.params = new_params
+                self.uplink_update(session, received, new_params)
+            self.sim.schedule(client.train_time_ns, _batched_done)
+            return
+
         def _train_done() -> None:
             received = client.params
             new_params, metrics = client.train_fn(
@@ -647,19 +673,25 @@ class ServerCore:
                 template, delta_tree, self.cfg.server_lr)
             return
 
-        trees = [unflatten_from_vector(v, template) for v, _ in contribs]
-        weights = [w for _, w in contribs]
         if self.cfg.aggregation == "pairwise":
             # Paper Eq. 1: fold per arrival order.
             g = self.global_params
-            for t in trees:
-                g = agg.pairwise_average(g, t)
+            for v, _ in contribs:
+                g = agg.pairwise_average(g, unflatten_from_vector(v, template))
             self.global_params = g
         elif self.cfg.aggregation == "fedavg":
-            self.global_params = agg.fedavg(
-                trees, weights, backend=self.cfg.aggregation_backend)
+            # Contributions are already flat wire vectors: aggregate the
+            # stack directly and unflatten once.  Bit-identical to the old
+            # per-leaf tree fold (fedavg_stack's numpy path accumulates in
+            # the same order/dtype), so the replay digests are unchanged.
+            stack = np.stack([v for v, _ in contribs])
+            vec = agg.fedavg_stack(stack, [w for _, w in contribs],
+                                   backend=self.cfg.aggregation_backend)
+            self.global_params = unflatten_from_vector(
+                vec.astype(np.float32, copy=False), template)
         elif self.cfg.aggregation == "trimmed_mean":
-            self.global_params = agg.trimmed_mean(trees)
+            self.global_params = agg.trimmed_mean(
+                [unflatten_from_vector(v, template) for v, _ in contribs])
         else:
             raise ValueError(f"unknown aggregation {self.cfg.aggregation}")
 

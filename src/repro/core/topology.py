@@ -613,6 +613,11 @@ class GossipSystem:
         self.retx_total = 0
         self._failed_legs = 0
         self._round_idx = -1
+        # Optional repro.core.client_compute.BatchTrainer: every client's
+        # training input is its round-start model, so the whole round is
+        # submitted up front and trains as one vmapped batch at the first
+        # timer fire.  None = the per-client train_fn path.
+        self.batch_trainer: Optional[Any] = None
         self._rx = [self.transport.create_receiver(
             sim, sim.node(c.addr), cfg.transport, self._make_deliver(i))
             for i, c in enumerate(self.clients)]
@@ -659,7 +664,11 @@ class GossipSystem:
 
     def _train_and_send(self, i: int) -> None:
         c = self.clients[i]
-        new_params, metrics = c.train_fn(c.params, self._round_idx, c)
+        if self.batch_trainer is not None:
+            _, new_params, metrics = self.batch_trainer.collect(
+                (self._round_idx, i))
+        else:
+            new_params, metrics = c.train_fn(c.params, self._round_idx, c)
         c.metrics_history.append(metrics)
         c.params = new_params
         vec = flatten_to_vector(new_params)
@@ -686,6 +695,10 @@ class GossipSystem:
         t0 = self.sim.now_ns
         for box in self._inbox:
             box.clear()
+        if self.batch_trainer is not None:
+            for i, c in enumerate(self.clients):
+                self.batch_trainer.submit((self._round_idx, i), c.addr,
+                                          c.params, self._round_idx)
         for i, c in enumerate(self.clients):
             self.sim.schedule(c.train_time_ns,
                               lambda i=i: self._train_and_send(i))

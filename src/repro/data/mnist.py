@@ -1,15 +1,25 @@
-"""Synthetic MNIST stand-in for the paper's quickstart scenario.
+"""MNIST for the paper's quickstart scenario, with an offline fallback.
 
-The paper trains a small Keras model on MNIST per client. This container is
-offline, so we synthesize a 10-class 28x28 problem with the same geometry:
-each class is a fixed seeded template (blurred blob constellation) plus
-pixel noise. Linearly separable enough that the paper's tiny MLP learns it in
-a few local epochs, deterministic per (seed, client).
+The paper trains a small Keras model on MNIST per client.  :func:`load_mnist`
+tries the real IDX files first (a local ``data_dir``, then the canonical
+mirrors) and — because CI and this container run offline — **falls back to a
+seeded synthetic digit set** with the same geometry: each class is a fixed
+seeded template (blurred blob constellation) plus pixel noise
+(:class:`SyntheticMnist`).  Linearly separable enough that the paper's tiny
+MLP learns it in a few local epochs, deterministic per (seed, client).
+
+:func:`dirichlet_shards` produces the non-IID client partition (one
+Dirichlet(alpha) class mixture per client) the federated scenarios train
+over.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import gzip
+import os
+import struct
+import urllib.request
 
 import numpy as np
 
@@ -42,3 +52,148 @@ class SyntheticMnist:
         x = self.templates[labels] + rng.normal(
             0, self.noise, size=(n, self.side, self.side)).astype(np.float32)
         return x.reshape(n, -1).astype(np.float32), labels.astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# Real MNIST (IDX files) with the synthetic fallback
+# --------------------------------------------------------------------------
+_MNIST_FILES = {
+    "x_train": "train-images-idx3-ubyte.gz",
+    "y_train": "train-labels-idx1-ubyte.gz",
+    "x_test": "t10k-images-idx3-ubyte.gz",
+    "y_test": "t10k-labels-idx1-ubyte.gz",
+}
+_MNIST_MIRRORS = (
+    "https://storage.googleapis.com/cvdf-datasets/mnist/",
+    "https://ossci-datasets.s3.amazonaws.com/mnist/",
+)
+
+
+def _read_idx(data: bytes) -> np.ndarray:
+    """Parse one IDX payload (images: magic 2051; labels: magic 2049)."""
+    if len(data) < 8:
+        raise ValueError("truncated IDX payload")
+    magic, n = struct.unpack(">II", data[:8])
+    if magic == 2049:                              # labels: (n,) uint8
+        return np.frombuffer(data, np.uint8, count=n, offset=8)
+    if magic == 2051:                              # images: (n, rows, cols)
+        rows, cols = struct.unpack(">II", data[8:16])
+        arr = np.frombuffer(data, np.uint8, count=n * rows * cols, offset=16)
+        return arr.reshape(n, rows * cols)
+    raise ValueError(f"bad IDX magic {magic}")
+
+
+def _fetch_idx(name: str, data_dir: str | None, download: bool,
+               timeout: float) -> np.ndarray:
+    """One IDX file from ``data_dir`` or the mirrors; raises on any miss."""
+    if data_dir is not None:
+        path = os.path.join(data_dir, name)
+        if os.path.exists(path):
+            with gzip.open(path, "rb") as f:
+                return _read_idx(f.read())
+    if not download:
+        raise FileNotFoundError(name)
+    last: Exception | None = None
+    for mirror in _MNIST_MIRRORS:
+        try:
+            with urllib.request.urlopen(mirror + name,
+                                        timeout=timeout) as resp:
+                raw = resp.read()
+            data = gzip.decompress(raw)
+            if data_dir is not None:
+                os.makedirs(data_dir, exist_ok=True)
+                with open(os.path.join(data_dir, name), "wb") as f:
+                    f.write(raw)
+            return _read_idx(data)
+        except Exception as e:  # noqa: BLE001 - any mirror failure -> next
+            last = e
+    raise ConnectionError(f"no MNIST mirror reachable for {name}: {last}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MnistData:
+    """A concrete train/test split, real or synthetic.
+
+    ``x_*`` are float32 ``(n, 784)`` in [~0, ~1]; ``y_*`` are int32 labels.
+    ``source`` records which path produced the data (``"real"`` |
+    ``"synthetic"``) so benchmarks can report it honestly.
+    """
+
+    x_train: np.ndarray
+    y_train: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+    source: str
+
+    @property
+    def n_train(self) -> int:
+        return int(self.x_train.shape[0])
+
+
+def load_mnist(n_train: int = 8192, n_test: int = 1024, *, seed: int = 0,
+               data_dir: str | None = None, download: bool = True,
+               timeout: float = 5.0) -> MnistData:
+    """Real MNIST when reachable, the seeded synthetic set otherwise.
+
+    The fallback is **deterministic** per ``seed`` (pinned by
+    ``tests/test_client_compute.py``): CI runs offline today, so every
+    offline run of the same config sees bit-identical data.  Set
+    ``download=False`` to force the offline path explicitly.
+    """
+    try:
+        x_train = _fetch_idx(_MNIST_FILES["x_train"], data_dir, download,
+                             timeout)
+        y_train = _fetch_idx(_MNIST_FILES["y_train"], data_dir, download,
+                             timeout)
+        x_test = _fetch_idx(_MNIST_FILES["x_test"], data_dir, download,
+                            timeout)
+        y_test = _fetch_idx(_MNIST_FILES["y_test"], data_dir, download,
+                            timeout)
+        return MnistData(
+            x_train=(x_train[:n_train].astype(np.float32) / 255.0),
+            y_train=y_train[:n_train].astype(np.int32),
+            x_test=(x_test[:n_test].astype(np.float32) / 255.0),
+            y_test=y_test[:n_test].astype(np.int32),
+            source="real")
+    except Exception:  # noqa: BLE001 - unreachable/corrupt -> synthetic
+        syn = SyntheticMnist(seed=seed)
+        # Distinct (client, step) keys for the two splits so the test set
+        # is never a subset of the training set.
+        x_train, y_train = syn.sample(n_train, client=0, step=0)
+        x_test, y_test = syn.sample(n_test, client=1_000_000, step=0)
+        return MnistData(x_train=x_train, y_train=y_train,
+                         x_test=x_test, y_test=y_test, source="synthetic")
+
+
+def dirichlet_shards(labels: np.ndarray, n_clients: int, *,
+                     alpha: float = 0.5, seed: int = 0,
+                     shard_size: int | None = None) -> np.ndarray:
+    """Non-IID client partition: one Dirichlet(alpha) class mixture each.
+
+    Returns an int32 index matrix ``(n_clients, shard_size)`` into
+    ``labels``'s axis 0 — a fixed-width layout so the vmapped trainer can
+    gather every client's shard with one indexed load.  Small ``alpha``
+    concentrates each client on few classes (the FedAvg-hostile regime);
+    large ``alpha`` approaches IID.  Sampling is with replacement within a
+    class, seeded, and consumes only ``default_rng(seed)`` draws in a fixed
+    order — deterministic across platforms.
+    """
+    if n_clients < 1:
+        raise ValueError("n_clients must be >= 1")
+    if alpha <= 0:
+        raise ValueError("dirichlet alpha must be > 0")
+    labels = np.asarray(labels)
+    n = labels.shape[0]
+    if shard_size is None:
+        shard_size = max(1, n // n_clients)
+    classes = np.unique(labels)
+    by_class = {int(c): np.flatnonzero(labels == c) for c in classes}
+    rng = np.random.default_rng(seed)
+    out = np.empty((n_clients, shard_size), np.int32)
+    for i in range(n_clients):
+        mix = rng.dirichlet(np.full(len(classes), alpha))
+        drawn_classes = rng.choice(len(classes), size=shard_size, p=mix)
+        for j, ci in enumerate(drawn_classes):
+            pool = by_class[int(classes[ci])]
+            out[i, j] = pool[int(rng.integers(len(pool)))]
+    return out

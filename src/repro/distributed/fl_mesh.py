@@ -30,6 +30,22 @@ from jax.sharding import PartitionSpec as P
 QBLOCK = 1024
 
 
+def client_mesh(devices=None) -> "jax.sharding.Mesh":
+    """A 1-D ``("clients",)`` mesh over the local devices.
+
+    The fleet's ``shard`` train backend
+    (:class:`repro.core.client_compute.ShardBackend`) splits each vmapped
+    training batch over this axis, one contiguous slab of clients per
+    device; with a single device the backend skips the mesh entirely and
+    runs plain vmap, so this helper is only consulted when there is
+    something to shard over.
+    """
+    import numpy as np
+    if devices is None:
+        devices = jax.devices()
+    return jax.sharding.Mesh(np.asarray(devices), ("clients",))
+
+
 def stack_for_pods(params: Any, n_pods: int) -> Any:
     """Replicate a template tree into per-pod copies (leading pod dim)."""
     return jax.tree_util.tree_map(

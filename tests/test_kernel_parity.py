@@ -73,6 +73,60 @@ class TestFedavgBackendParity:
             FLConfig(aggregation_backend="nope")
 
 
+class TestFedavgStackParity:
+    """The batched path: ``fedavg_stack`` over a flat ``(K, P)`` stack.
+
+    Two claims from its docstring, both load-bearing: the numpy stack path
+    is **bit-identical** to the per-leaf tree fold (so the orchestrator's
+    flat fast path cannot move a replay digest), and the kernel backend
+    mirrors it to ~1 ULP (the same oracle contract as the tree path).
+    """
+
+    @pytest.mark.parametrize("k,n", [(2, 300), (3, 1024), (8, 4096),
+                                     (5, 16384 + 13)])
+    def test_stack_numpy_bitwise_equals_tree_numpy(self, k, n):
+        from repro.core.packetizer import (flatten_to_vector,
+                                           unflatten_from_vector)
+        rng = np.random.default_rng(k * 31 + n)
+        trees = _trees(rng, k, n)
+        weights = (rng.random(k) * 2.0 + 0.1).tolist()
+        tree_out = agg.fedavg(trees, weights, backend="numpy")
+        stack = np.stack([flatten_to_vector(t) for t in trees])
+        vec = agg.fedavg_stack(stack, weights, backend="numpy")
+        rebuilt = unflatten_from_vector(vec, trees[0])
+        for key in tree_out:
+            np.testing.assert_array_equal(tree_out[key], rebuilt[key])
+
+    @pytest.mark.parametrize("k,n", [(2, 256), (7, 4096), (16, 16384 + 5)])
+    def test_kernel_mirrors_numpy_stack(self, k, n):
+        rng = np.random.default_rng(k * 97 + n)
+        stack = rng.standard_normal((k, n)).astype(np.float32)
+        weights = (rng.random(k) + 0.05).tolist()
+        a = agg.fedavg_stack(stack, weights, backend="numpy")
+        b = agg.fedavg_stack(stack, weights, backend="kernel")
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    def test_auto_routes_to_kernel_and_validates(self):
+        rng = np.random.default_rng(2)
+        stack = rng.standard_normal((3, 512)).astype(np.float32)
+        auto = agg.fedavg_stack(stack, backend="auto")
+        kern = agg.fedavg_stack(stack, backend="kernel")
+        np.testing.assert_array_equal(auto, kern)
+        with pytest.raises(ValueError, match="backend"):
+            agg.fedavg_stack(stack, backend="gpu4000")
+        with pytest.raises(ValueError, match="stack"):
+            agg.fedavg_stack(np.zeros((0, 8), np.float32))
+        with pytest.raises(ValueError, match="stack"):
+            agg.fedavg_stack(np.zeros(8, np.float32))
+
+    def test_kernel_flat_direct(self):
+        # fedavg_flat is the raw Pallas entry the stack path routes to;
+        # K=1 must be the identity up to weight normalization.
+        vec = np.linspace(-1, 1, 777, dtype=np.float32)
+        out = np.asarray(fedavg_ops.fedavg_flat(vec[None], [3.0]))
+        np.testing.assert_allclose(out, vec, rtol=1e-6, atol=1e-7)
+
+
 class TestQuantizeOracleParity:
     """The compression docstring says quantize_int8 mirrors
     repro.kernels.quantize.ref — pinned here on shared random vectors."""
