@@ -15,12 +15,22 @@ clients-vs-wall-time across the ``--clients`` sweep.  Results land in ``--out`` 
 bit-for-bit reproducible for a fixed seed (``--replay-check`` proves it by
 running the whole matrix twice).
 
+``--engine flow`` swaps in the analytic flow engine
+(``repro.core.flow``): same seeded scenario, per-burst closed forms
+instead of per-packet events — the only engine that takes 10k/100k-client
+fleets through CI in minutes.  ``--flow-gate`` additionally runs one mudp
+cell on both the batched and flow engines and fails unless flow clears
+``--flow-gate-min`` x the packet events per wall second.
+
 The process exits non-zero if any requested transport is missing from the
 results — CI uses this so no transport is ever silently skipped.
 
   PYTHONPATH=src python benchmarks/fleet_scale.py --clients 100 --rounds 2
   PYTHONPATH=src python benchmarks/fleet_scale.py --clients 64 --rounds 1 \\
       --replay-check
+  PYTHONPATH=src python benchmarks/fleet_scale.py --clients 10000,100000 \\
+      --engine flow --topology hier --cells 32 --transports mudp \\
+      --flow-gate
 """
 
 from __future__ import annotations
@@ -151,6 +161,33 @@ def run_matrix(args, transports: list[str]) -> tuple[dict, dict, dict]:
     return fleets, wall, errors
 
 
+def flow_gate(n_clients: int, min_ratio: float, *, rounds: int = 2,
+              seed: int = 0) -> dict:
+    """Run the same seeded mudp fleet on the batched and flow engines and
+    compare simulated packet events per wall second.  The flow engine's
+    whole point is per-burst closed forms instead of per-packet events, so
+    its event throughput must dominate; *what* it computes is gated
+    separately by the distributional tests (tests/test_flow_engine.py)."""
+    out: dict = {}
+    for engine in ("batched", "flow"):
+        t0 = time.perf_counter()
+        cell = run_fleet("mudp", n_clients=n_clients, rounds=rounds,
+                         seed=seed, participation=0.6,
+                         deadline_ns=10 * NS_PER_SEC, n_params=2048,
+                         engine=engine)
+        wall_s = time.perf_counter() - t0
+        events = sum(r["packets_sent"] for r in cell["rounds"])
+        out[engine] = {"wall_s": wall_s, "packet_events": events,
+                       "events_per_sec": events / wall_s if wall_s else 0.0}
+    ratio = (out["flow"]["events_per_sec"]
+             / out["batched"]["events_per_sec"]
+             if out["batched"]["events_per_sec"] else float("inf"))
+    out.update(ratio=ratio, min_ratio=min_ratio, ok=ratio >= min_ratio)
+    print(f"flow-gate: clients={n_clients} flow/batched events-per-sec "
+          f"ratio {ratio:.1f}x (floor {min_ratio:.1f}x)", flush=True)
+    return out
+
+
 def bench(rounds: int = 1):
     """benchmarks.run harness entry: a small fleet across all transports."""
     rows = []
@@ -185,9 +222,26 @@ def main() -> int:
                     help="comma-separated subset (default: every "
                          "registered transport)")
     ap.add_argument("--engine", default="batched",
-                    choices=["batched", "per_packet"],
-                    help="simulator engine (bit-identical results; "
-                         "batched is the fleet hot path)")
+                    choices=["batched", "per_packet", "flow"],
+                    help="simulator engine: batched/per_packet are "
+                         "bit-identical; flow is the analytic fast path "
+                         "(statistically equivalent — tests/statcheck.py "
+                         "gates it), the only engine that reaches "
+                         "100k-client fleets in CI minutes")
+    ap.add_argument("--flow-gate", action="store_true",
+                    help="run one mudp cell on batched AND flow at "
+                         "--flow-gate-clients and fail unless flow "
+                         "processes >= --flow-gate-min x the simulated "
+                         "packet events per wall second")
+    ap.add_argument("--flow-gate-clients", type=int, default=1024,
+                    help="fleet size for the --flow-gate comparison "
+                         "(large enough for the flow advantage to "
+                         "dominate, small enough for batched to finish "
+                         "in seconds)")
+    ap.add_argument("--flow-gate-min", type=float, default=2.0,
+                    help="minimum flow/batched events-per-sec ratio "
+                         "(conservative: locally the ratio is >> 10x, "
+                         "shared CI runners are noisy)")
     ap.add_argument("--mode", default="sync", choices=["sync", "async"],
                     help="scheduling policy: sync round barrier or "
                          "FedBuff-style async (each row is one buffered "
@@ -241,6 +295,10 @@ def main() -> int:
         print(f"scaling: clients={n} wall_s={total:.2f} "
               f"wall_s_per_client={total / n:.4f}", flush=True)
 
+    gate = (flow_gate(args.flow_gate_clients, args.flow_gate_min,
+                      rounds=args.rounds, seed=args.seed)
+            if args.flow_gate else None)
+
     report = {
         "meta": {
             "clients": args.clients,
@@ -261,6 +319,7 @@ def main() -> int:
         "errors": errors,
         "wall": wall,
         "scaling": scaling,
+        "flow_gate": gate,
     }
 
     if args.replay_check:
@@ -284,6 +343,10 @@ def main() -> int:
             print(f"MISSING RESULT: {key}", file=sys.stderr)
         for key, err in errors.items():
             print(f"TRANSPORT ERROR: {key}: {err}", file=sys.stderr)
+        return 1
+    if gate is not None and not gate["ok"]:
+        print(f"FLOW GATE FAILED: flow/batched events-per-sec ratio "
+              f"{gate['ratio']:.2f} < {gate['min_ratio']}", file=sys.stderr)
         return 1
     return 0
 

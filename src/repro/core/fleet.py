@@ -157,8 +157,11 @@ class FleetConfig:
     seed: int = 0
     server_addr: str = "10.0.0.1"
     # Simulator engine: "batched" (the vectorized flight engine — the fleet
-    # hot path) or "per_packet" (the reference event-per-packet loop).  The
-    # two are bit-for-bit identical, so this is purely a speed knob.
+    # hot path), "per_packet" (the reference event-per-packet loop; the two
+    # are bit-for-bit identical, so that choice is purely a speed knob), or
+    # "flow" (the analytic tier — statistically equivalent per the
+    # tests/statcheck.py harness, and the only tier that reaches 100k+
+    # clients in CI-minutes).
     engine: str = "batched"
     # Round policy, forwarded into FLConfig by build_fleet().
     participation_fraction: float = 1.0

@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import aggregation as agg
 from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
                                    unflatten_from_vector)
+from repro.core.flow import maybe_flow
 from repro.core.simulator import Simulator
 from repro.core.transport import (Delivery, Transport, TransportConfig,
                                   make_transport, validate_transport_kind)
@@ -322,8 +323,11 @@ class ServerCore:
         self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
 
         # Transport dispatch goes through the registry: the core has no
-        # per-protocol branches, so new transports plug in unchanged.
-        self.transport: Transport = make_transport(cfg.transport.kind)
+        # per-protocol branches, so new transports plug in unchanged.  Under
+        # the flow engine the transport is swapped for its analytic model
+        # (same name/caps surface — see repro.core.flow).
+        self.transport: Transport = maybe_flow(
+            sim, make_transport(cfg.transport.kind))
 
         # Persistent receivers.
         self._server_rx = self.transport.create_receiver(

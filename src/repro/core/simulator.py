@@ -8,7 +8,7 @@ and cancellable timers (NS3 ``Simulator::Schedule``/``Cancel``).
 Everything is single-threaded and seeded — a simulation replays bit-for-bit,
 which the tests and benchmarks rely on.
 
-Two engines drive the innermost loop (``Simulator(engine=...)``):
+Three engines drive the innermost loop (``Simulator(engine=...)``):
 
 * ``"per_packet"`` (default) — the reference path: one calendar event plus
   one closure per transmitted packet, exactly the seed implementation.
@@ -19,12 +19,19 @@ Two engines drive the innermost loop (``Simulator(engine=...)``):
   event+closure per packet.  Runs of consecutive payload packets are then
   ingested through the receivers' bulk hooks (see :meth:`Node.register`)
   without touching the heap at all.
+* ``"flow"`` — the analytic engine (``repro.core.flow``): each transport
+  transaction is modeled in closed form — one Binomial loss draw per
+  burst, FIFO-cumsum completion times with expected jitter, recovery as
+  an expected-value recursion — and schedules a handful of events total.
+  Not bit-exact, but statistically equivalent and deterministic per seed.
 
-The two engines are bit-for-bit identical: same keyed RNG draws (see
+The first two engines are bit-for-bit identical: same keyed RNG draws (see
 ``repro.core.channel``), same tie-breaking (flights carry the tie numbers
 per-packet scheduling would have assigned), same stats, same final clock.
 ``tests/test_engine_equivalence.py`` pins this down for every registered
-transport; ``benchmarks/simcore.py`` measures the speedup.
+transport; ``benchmarks/simcore.py`` measures the speedup.  The flow
+engine's statistical-equivalence contract is pinned by the seed-sweep
+harness in ``tests/statcheck.py`` + ``tests/test_flow_engine.py``.
 """
 
 from __future__ import annotations
@@ -40,7 +47,11 @@ import numpy as np
 from repro.core.channel import Link, packet_key_arrays
 from repro.core.packets import Packet, PacketKind
 
-ENGINES = ("per_packet", "batched")
+ENGINES = ("per_packet", "batched", "flow")
+# The packet-level engines are bit-for-bit interchangeable; "flow" is
+# statistically equivalent only (gated by tests/test_flow_engine.py), so
+# digest-pinned tests iterate PACKET_ENGINES, not ENGINES.
+PACKET_ENGINES = ("per_packet", "batched")
 
 # Bursts below this size go through the scalar path even under the batched
 # engine: the fixed numpy planning cost only pays for itself on real bursts.

@@ -55,6 +55,7 @@ from repro.core.scheduling import SyncScheduler
 from repro.core.server import (TRAINING, ClientSession, RoundResult,
                                ServerCore)
 from repro.core.simulator import Simulator
+from repro.core.flow import maybe_flow
 from repro.core.transport import Transport, make_transport
 from repro.core.wire import (Pipeline, WireDecodeError, WireError,
                              decode_payload as wire_decode_payload,
@@ -591,7 +592,8 @@ class GossipSystem:
         self.cfg = cfg
         self.adj = adj
         self.pipeline = pipeline
-        self.transport: Transport = make_transport(cfg.transport.kind)
+        self.transport: Transport = maybe_flow(
+            sim, make_transport(cfg.transport.kind))
         self.clients = [
             FLClient(p.addr, train_fn_factory(i, p),
                      train_time_ns=p.train_time_ns, weight=p.weight)

@@ -1,0 +1,116 @@
+"""Shared fleet fixtures.
+
+Three builders cover the fleet setups the suite used to copy-paste:
+
+* ``simple_star`` — a hand-wired :class:`FederatedSystem` over NoLoss
+  links with constant-update clients (participation / aggregation tests
+  that need exact arithmetic, no transport noise);
+* ``consensus_fleet`` — the seeded :func:`build_fleet` path over a
+  :class:`ConsensusObjective` (topology / transport semantics);
+* ``training_fleet`` — the :func:`build_fleet_training` path with a
+  model + train backend (client-compute parity tests; callers gate on
+  jax themselves via ``pytest.importorskip``).
+
+All three are factory fixtures: they return a builder so one test can
+construct several fleets with different knobs.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import (ConsensusObjective, FLClient, FLConfig, FleetConfig,
+                        Link, TransportConfig, build_fleet,
+                        build_fleet_training)
+from repro.core.channel import NoLoss
+from repro.core.rounds import FederatedSystem
+from repro.core.simulator import Simulator
+
+NS = 1_000_000_000
+SIMPLE_SERVER = "10.1.2.5"
+
+
+@pytest.fixture
+def simple_star():
+    """Factory: ``build(n_clients, cfg, ...)`` -> (sim, system, clients).
+
+    Every client trains to a constant ``train_value`` over a lossless
+    100 Mb/s link, so aggregation results can be hand-computed exactly.
+    """
+    def build(n_clients, cfg, train_value=1.0, train_times=None,
+              weights=None, server=SIMPLE_SERVER, n_params=50):
+        sim = Simulator()
+        clients = []
+        for i in range(n_clients):
+            addr = f"10.1.2.{10 + i}"
+            sim.connect(addr, server, Link(1e8, 1_000_000, NoLoss()),
+                        Link(1e8, 1_000_000, NoLoss()))
+
+            def fn(params, round_idx, client, v=train_value):
+                return ({k: np.full_like(p, v) for k, p in params.items()},
+                        {})
+            tt = (train_times or {}).get(addr, 1_000_000)
+            c = FLClient(addr, fn, train_time_ns=tt)
+            if weights and addr in weights:
+                c.weight = weights[addr]
+            clients.append(c)
+        params = {"w": np.zeros((n_params,), np.float32)}
+        return sim, FederatedSystem(sim, server, clients, params,
+                                    cfg), clients
+    return build
+
+
+@pytest.fixture
+def consensus_fleet():
+    """Factory: ``build(topology, ...)`` -> (obj, sim, system, results).
+
+    The seeded cohort path: :func:`build_fleet` over a
+    :class:`ConsensusObjective`, then ``rounds`` rounds (``rounds=0``
+    skips running so the caller can drive the system itself).
+    """
+    def build(topology="star", *, n=16, rounds=3, seed=7, obj_params=48,
+              obj_seed=3, transport="mudp", fl_cfg=None, **fleet_kw):
+        obj = ConsensusObjective(n, obj_params, seed=obj_seed)
+        fleet = FleetConfig(n_clients=n, seed=seed, topology=topology,
+                            **fleet_kw)
+        cfg = fl_cfg or FLConfig(transport=TransportConfig(kind=transport))
+        sim, system, _ = build_fleet(
+            fleet, obj.init_params(), lambda i, p: obj.train_fn(i, p), cfg)
+        results = system.run_rounds(rounds) if rounds else []
+        return obj, sim, system, results
+    return build
+
+
+@pytest.fixture
+def training_fleet():
+    """Factory: ``run(backend, ...)`` -> (FleetBuild, results), the
+    :func:`build_fleet_training` path with a model and train backend."""
+    def run(backend, *, seed=0, transport="mudp", mode="sync",
+            topology="star", model="consensus", rounds=2, n_clients=10,
+            model_args=None, **fleet_kw):
+        if model_args is None:
+            model_args = ({"n_params": 96} if model == "consensus"
+                          else {"n_train": 512, "n_test": 128,
+                                "shard_size": 32, "hidden": 16})
+        fleet = FleetConfig(n_clients=n_clients, seed=seed,
+                            topology=topology, mode=mode, model=model,
+                            train_backend=backend, model_args=model_args,
+                            **fleet_kw)
+        fl = FLConfig(aggregation="fedavg", mode=mode,
+                      transport=TransportConfig(kind=transport,
+                                                timeout_ns=2 * NS,
+                                                udp_deadline_ns=3 * NS))
+        build = build_fleet_training(fleet, fl)
+        results = build.system.run_rounds(rounds)
+        return build, results
+    return run
+
+
+@pytest.fixture
+def params_digest():
+    """Stable content hash of a ``{"w": ...}`` parameter dict."""
+    def digest(params) -> str:
+        return hashlib.sha256(
+            np.asarray(params["w"], np.float32).tobytes()).hexdigest()
+    return digest

@@ -20,8 +20,7 @@ import pytest
 
 jax = pytest.importorskip("jax")
 
-from repro.core import (FleetConfig, FLConfig,            # noqa: E402
-                        TransportConfig, build_fleet_training)
+from repro.core import FleetConfig                         # noqa: E402
 from repro.core.client_compute import (BatchTrainer,       # noqa: E402
                                        ConsensusModel, available_models,
                                        available_train_backends, make_model,
@@ -34,8 +33,6 @@ from repro.data.mnist import (SyntheticMnist,              # noqa: E402
 
 sys.path.insert(0, os.path.dirname(__file__))
 from test_orchestrator_equivalence import EXPECTED, run_digest  # noqa: E402
-
-NS = 1_000_000_000
 
 # The explicit parity bound the issue asks for: python-vs-vmap must agree
 # to <= 4 float32 ULPs elementwise (jax-vs-jax on the same arithmetic; in
@@ -146,32 +143,18 @@ def test_vmap_padding_is_invisible(n=5):
 
 
 # --------------------------------------------------------------------------
-# Fleet-level parity: identical rounds across the scenario matrix
+# Fleet-level parity: identical rounds across the scenario matrix.
+# Fleet construction comes from the shared ``training_fleet`` fixture in
+# conftest.py.
 # --------------------------------------------------------------------------
-def _run_fleet(backend, *, seed=0, transport="mudp", mode="sync",
-               topology="star", model="consensus", rounds=2, n_clients=10,
-               **fleet_kw):
-    model_args = ({"n_params": 96} if model == "consensus"
-                  else {"n_train": 512, "n_test": 128, "shard_size": 32,
-                        "hidden": 16})
-    fleet = FleetConfig(n_clients=n_clients, seed=seed, topology=topology,
-                        mode=mode, model=model, train_backend=backend,
-                        model_args=model_args, **fleet_kw)
-    fl = FLConfig(aggregation="fedavg", mode=mode,
-                  transport=TransportConfig(kind=transport,
-                                            timeout_ns=2 * NS,
-                                            udp_deadline_ns=3 * NS))
-    build = build_fleet_training(fleet, fl)
-    results = build.system.run_rounds(rounds)
-    return build, results
-
-
 @pytest.mark.parametrize("seed", [0, 1])
 @pytest.mark.parametrize("transport", ["mudp", "udp"])
 @pytest.mark.parametrize("mode", ["sync", "async"])
-def test_fleet_parity_matrix(seed, transport, mode):
-    bp, rp = _run_fleet("python", seed=seed, transport=transport, mode=mode)
-    bv, rv = _run_fleet("vmap", seed=seed, transport=transport, mode=mode)
+def test_fleet_parity_matrix(training_fleet, seed, transport, mode):
+    bp, rp = training_fleet("python", seed=seed, transport=transport,
+                            mode=mode)
+    bv, rv = training_fleet("vmap", seed=seed, transport=transport,
+                            mode=mode)
     # The event layer must be untouched by batching: same rosters, same
     # arrivals, same simulated durations, round for round.
     assert [r.roster for r in rp] == [r.roster for r in rv]
@@ -186,17 +169,17 @@ def test_fleet_parity_matrix(seed, transport, mode):
 
 @pytest.mark.parametrize("topology,kw", [("hier", {"cells": 3}),
                                          ("gossip", {})])
-def test_fleet_parity_topologies(topology, kw):
-    bp, rp = _run_fleet("python", topology=topology, **kw)
-    bv, rv = _run_fleet("vmap", topology=topology, **kw)
+def test_fleet_parity_topologies(training_fleet, topology, kw):
+    bp, rp = training_fleet("python", topology=topology, **kw)
+    bv, rv = training_fleet("vmap", topology=topology, **kw)
     assert [r.arrived for r in rp] == [r.arrived for r in rv]
     assert_ulp_close(flatten_to_vector(bp.system.global_params),
                      flatten_to_vector(bv.system.global_params))
 
 
-def test_fleet_parity_mlp_over_mudp():
-    bp, rp = _run_fleet("python", model="mlp", rounds=2, n_clients=8)
-    bv, rv = _run_fleet("vmap", model="mlp", rounds=2, n_clients=8)
+def test_fleet_parity_mlp_over_mudp(training_fleet):
+    bp, rp = training_fleet("python", model="mlp", rounds=2, n_clients=8)
+    bv, rv = training_fleet("vmap", model="mlp", rounds=2, n_clients=8)
     assert [r.arrived for r in rp] == [r.arrived for r in rv]
     assert_ulp_close(flatten_to_vector(bp.system.global_params),
                      flatten_to_vector(bv.system.global_params))
@@ -205,8 +188,8 @@ def test_fleet_parity_mlp_over_mudp():
     assert m.accuracy(bv.system.global_params) > m.accuracy(m.init_params())
 
 
-def test_python_backend_attaches_no_trainer():
-    build, _ = _run_fleet("python")
+def test_python_backend_attaches_no_trainer(training_fleet):
+    build, _ = training_fleet("python")
     assert build.trainer is None
 
 

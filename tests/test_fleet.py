@@ -93,52 +93,33 @@ class TestLinkJitter:
 
 
 # --------------------------------------------------------------------------
-# Partial participation sampling
+# Partial participation sampling (fleet wiring from the shared
+# ``simple_star`` fixture in conftest.py)
 # --------------------------------------------------------------------------
-def _build_simple(n_clients, cfg, train_value=1.0, train_times=None,
-                  weights=None):
-    sim = Simulator()
-    clients = []
-    for i in range(n_clients):
-        addr = f"10.1.2.{10 + i}"
-        sim.connect(addr, SERVER, Link(1e8, 1_000_000, NoLoss()),
-                    Link(1e8, 1_000_000, NoLoss()))
-
-        def fn(params, round_idx, client, v=train_value):
-            return ({k: np.full_like(p, v) for k, p in params.items()}, {})
-        tt = (train_times or {}).get(addr, 1_000_000)
-        c = FLClient(addr, fn, train_time_ns=tt)
-        if weights and addr in weights:
-            c.weight = weights[addr]
-        clients.append(c)
-    params = {"w": np.zeros((50,), np.float32)}
-    return sim, FederatedSystem(sim, SERVER, clients, params, cfg), clients
-
-
 class TestPartialParticipation:
-    def test_fraction_honored_and_deterministic(self):
+    def test_fraction_honored_and_deterministic(self, simple_star):
         cfg = FLConfig(participation_fraction=0.5, participation_seed=3)
-        _, sys_a, _ = _build_simple(8, cfg)
-        _, sys_b, _ = _build_simple(8, cfg)
+        _, sys_a, _ = simple_star(8, cfg)
+        _, sys_b, _ = simple_star(8, cfg)
         ra, rb = sys_a.run_round(), sys_b.run_round()
         assert len(ra.roster) == 4
         assert ra.roster == rb.roster
         assert ra.arrived == rb.arrived
 
-    def test_rosters_rotate_across_rounds(self):
+    def test_rosters_rotate_across_rounds(self, simple_star):
         cfg = FLConfig(participation_fraction=0.5, participation_seed=0)
-        _, system, _ = _build_simple(12, cfg)
+        _, system, _ = simple_star(12, cfg)
         rosters = {tuple(system.run_round().roster) for _ in range(6)}
         assert len(rosters) > 1
 
-    def test_min_participants_floor(self):
+    def test_min_participants_floor(self, simple_star):
         cfg = FLConfig(participation_fraction=0.01, min_participants=2)
-        _, system, _ = _build_simple(6, cfg)
+        _, system, _ = simple_star(6, cfg)
         assert len(system.run_round().roster) == 2
 
-    def test_full_participation_unchanged(self):
+    def test_full_participation_unchanged(self, simple_star):
         cfg = FLConfig()   # participation_fraction=1.0 default
-        _, system, _ = _build_simple(5, cfg)
+        _, system, _ = simple_star(5, cfg)
         assert len(system.run_round().roster) == 5
 
 

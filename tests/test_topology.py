@@ -8,7 +8,6 @@ orchestrator-equivalence digests give at the scheduler level.
 """
 
 import dataclasses
-import hashlib
 
 import numpy as np
 import pytest
@@ -26,20 +25,8 @@ from repro.core.topology import (GossipTopology, HierSystem, StarTopology,
 from repro.core.wire import WireError, parse_hop_specs
 
 
-def _params_digest(params) -> str:
-    return hashlib.sha256(
-        np.asarray(params["w"], np.float32).tobytes()).hexdigest()
-
-
-def _build(topology, n=16, rounds=3, seed=7, fl_cfg=None, **kw):
-    obj = ConsensusObjective(n, 48, seed=3)
-    fleet = FleetConfig(n_clients=n, seed=seed, topology=topology, **kw)
-    sim, system, profiles = build_fleet(
-        fleet, obj.init_params(), lambda i, p: obj.train_fn(i, p),
-        fl_cfg or FLConfig(transport=TransportConfig(kind="mudp")))
-    results = system.run_rounds(rounds)
-    return obj, sim, system, results
-
+# Fleet construction and the params hash come from the shared
+# ``consensus_fleet`` / ``params_digest`` fixtures in conftest.py.
 
 # --------------------------------------------------------------------------
 # Registry
@@ -91,7 +78,7 @@ def test_parse_hop_specs_rejects(spec):
 # --------------------------------------------------------------------------
 # star: bit-identical to the historical wiring
 # --------------------------------------------------------------------------
-def test_star_bit_identical_to_historical_wiring():
+def test_star_bit_identical_to_historical_wiring(params_digest):
     n, rounds = 12, 3
     obj = ConsensusObjective(n, 48, seed=3)
     fleet = FleetConfig(n_clients=n, seed=7)
@@ -123,16 +110,16 @@ def test_star_bit_identical_to_historical_wiring():
                                   lambda i, p: obj.train_fn(i, p), base_cfg)
     new_results = new.run_rounds(rounds)
 
-    assert _params_digest(new.global_params) == \
-        _params_digest(old.global_params)
+    assert params_digest(new.global_params) == \
+        params_digest(old.global_params)
     assert sim_new.stats_digest() == sim_old.stats_digest()
     for a, b in zip(old_results, new_results):
         assert (a.arrived, a.failed, a.bytes_sent, a.duration_ns) == \
             (b.arrived, b.failed, b.bytes_sent, b.duration_ns)
 
 
-def test_star_hop_counters_cover_all_traffic():
-    _, sim, _, _ = _build("star")
+def test_star_hop_counters_cover_all_traffic(consensus_fleet):
+    _, sim, _, _ = consensus_fleet("star")
     assert set(sim.hop_bytes) == {"client->server", "server->client"}
     assert sum(sim.hop_bytes.values()) == sim.stats["bytes_sent"]
     assert sum(sim.hop_packets.values()) == sim.stats["packets_sent"]
@@ -141,9 +128,9 @@ def test_star_hop_counters_cover_all_traffic():
 # --------------------------------------------------------------------------
 # hier: edge aggregation
 # --------------------------------------------------------------------------
-def test_hier_matches_star_final_model():
-    obj_s, _, star, _ = _build("star", n=16)
-    obj_h, _, hier, _ = _build("hier", n=16, cells=4)
+def test_hier_matches_star_final_model(consensus_fleet):
+    obj_s, _, star, _ = consensus_fleet("star", n=16)
+    obj_h, _, hier, _ = consensus_fleet("hier", n=16, cells=4)
     np.testing.assert_allclose(hier.global_params["w"],
                                star.global_params["w"],
                                rtol=1e-5, atol=1e-6)
@@ -151,19 +138,19 @@ def test_hier_matches_star_final_model():
                - obj_s.loss(star.global_params)) < 1e-6
 
 
-def test_hier_root_link_smaller_than_star():
-    _, sim_s, _, _ = _build("star", n=16)
-    _, sim_h, _, _ = _build("hier", n=16, cells=4)
+def test_hier_root_link_smaller_than_star(consensus_fleet):
+    _, sim_s, _, _ = consensus_fleet("star", n=16)
+    _, sim_h, _, _ = consensus_fleet("hier", n=16, cells=4)
     assert sim_h.hop_bytes["edge->root"] < sim_s.hop_bytes["client->server"]
     assert set(sim_h.hop_bytes) == {"client->edge", "edge->client",
                                     "edge->root", "root->edge"}
     assert sum(sim_h.hop_bytes.values()) == sim_h.stats["bytes_sent"]
 
 
-def test_hier_cell_assignment_round_robin():
+def test_hier_cell_assignment_round_robin(consensus_fleet):
     fleet = FleetConfig(n_clients=10, topology="hier", cells=3)
     assert [fleet.cell_of(i) for i in range(6)] == [0, 1, 2, 0, 1, 2]
-    _, _, hier, _ = _build("hier", n=10, cells=3, rounds=1)
+    _, _, hier, _ = consensus_fleet("hier", n=10, cells=3, rounds=1)
     assert isinstance(hier, HierSystem)
     sizes = sorted(len(e.core.pool.clients) for e in hier.edges)
     assert sizes == [3, 3, 4]
@@ -173,40 +160,40 @@ def test_hier_cell_assignment_round_robin():
             assert hier.edge_for(addr) is e
 
 
-def test_hier_addresses_are_dual_plane():
-    _, sim, hier, _ = _build("hier", n=8, cells=2, rounds=1)
+def test_hier_addresses_are_dual_plane(consensus_fleet):
+    _, sim, hier, _ = consensus_fleet("hier", n=8, cells=2, rounds=1)
     for m, e in enumerate(hier.edges):
         assert e.addr == edge_client_addr(m)
         assert e.server_addr == edge_server_addr(m)
         assert e.addr != e.server_addr
 
 
-def test_hier_per_cell_histories_advance():
-    _, _, hier, results = _build("hier", n=16, cells=4, rounds=3)
+def test_hier_per_cell_histories_advance(consensus_fleet):
+    _, _, hier, results = consensus_fleet("hier", n=16, cells=4, rounds=3)
     assert len(results) == 3
     for e in hier.edges:
         assert len(e.core.history) == 3
 
 
-def test_hier_async_root():
-    _, sim, hier, results = _build(
+def test_hier_async_root(consensus_fleet):
+    _, sim, hier, results = consensus_fleet(
         "hier", n=16, cells=4, rounds=3, mode="async", buffer_k=4,
         round_deadline_ns=120_000_000_000)
     assert len(results) == 3
     assert sim.hop_bytes["edge->root"] > 0
 
 
-def test_hier_cell_scheduler_refuses_direct_drive():
-    _, _, hier, _ = _build("hier", n=8, cells=2, rounds=1)
+def test_hier_cell_scheduler_refuses_direct_drive(consensus_fleet):
+    _, _, hier, _ = consensus_fleet("hier", n=8, cells=2, rounds=1)
     with pytest.raises(RuntimeError, match="parent tier"):
         hier.edges[0].scheduler.run_round()
 
 
-def test_hier_per_hop_pipeline_specs():
-    _, sim, hier, _ = _build(
+def test_hier_per_hop_pipeline_specs(consensus_fleet):
+    _, sim, hier, _ = consensus_fleet(
         "hier", n=16, cells=4,
         hops="client->edge: int8(48); edge->root: raw")
-    plain = _build("hier", n=16, cells=4)[1]
+    plain = consensus_fleet("hier", n=16, cells=4)[1]
     # int8 quantization (block sized to the model) shrinks the cell uplink
     # vs the raw float default.
     assert sim.hop_bytes["client->edge"] < plain.hop_bytes["client->edge"]
@@ -234,20 +221,21 @@ def test_neighbor_graph_connected_and_seeded():
     assert len(seen) == 20
 
 
-def test_gossip_has_zero_server_nodes():
+def test_gossip_has_zero_server_nodes(consensus_fleet):
     fleet_server = FleetConfig(n_clients=12, topology="gossip",
                                neighbors=3).server_addr
-    _, sim, system, results = _build("gossip", n=12, neighbors=3)
+    _, sim, system, results = consensus_fleet("gossip", n=12, neighbors=3)
     assert fleet_server not in sim._nodes
     assert set(sim.hop_bytes) == {"peer->peer"}
     assert sim.hop_bytes["peer->peer"] == sim.stats["bytes_sent"]
     assert results[-1].metrics["neighbors_mean"] > 0
 
 
-def test_gossip_converges_and_is_deterministic():
-    obj1, _, s1, _ = _build("gossip", n=12, neighbors=3, rounds=4)
-    obj2, _, s2, _ = _build("gossip", n=12, neighbors=3, rounds=4)
-    assert _params_digest(s1.global_params) == _params_digest(s2.global_params)
+def test_gossip_converges_and_is_deterministic(consensus_fleet,
+                                               params_digest):
+    obj1, _, s1, _ = consensus_fleet("gossip", n=12, neighbors=3, rounds=4)
+    obj2, _, s2, _ = consensus_fleet("gossip", n=12, neighbors=3, rounds=4)
+    assert params_digest(s1.global_params) == params_digest(s2.global_params)
     initial = obj1.loss({"w": np.zeros(48, np.float32)})
     assert obj1.loss(s1.global_params) < 0.5 * initial
 
