@@ -13,6 +13,13 @@ must hash identically, and a header-only ``decode_payload`` must
 reproduce the out-of-band decode bit-for-bit.  CI runs this and uploads
 ``BENCH_wire.json``.
 
+Batch sweep: the same specs over a clients axis (N in {1,16,64,256}) at a
+smaller vector size where per-call overhead dominates, comparing the
+vectorized ``encode_batch``/``decode_payload_batch`` plane against the
+per-client loop.  ``--check`` additionally gates (a) batch bytes being
+identical to the loop's and (b) the numpy batch path clearing a >=4x
+combined encode+decode speedup at 256 clients.
+
   PYTHONPATH=src python benchmarks/wire_bench.py --check --out BENCH_wire.json
   PYTHONPATH=src python -m benchmarks.run --only wire
 """
@@ -27,7 +34,8 @@ import time
 
 import numpy as np
 
-from repro.core.wire import decode_payload, parse_pipeline
+from repro.core.wire import (decode_payload, decode_payload_batch,
+                             parse_pipeline)
 
 #: The spec matrix: the four legacy codecs as single-stage pipelines plus
 #: the compositions the FL layer actually ships.
@@ -116,13 +124,126 @@ def _determinism_check(vec: np.ndarray) -> list[str]:
     return failures
 
 
+#: Batch-plane sweep: clients axis at a vector size small enough that
+#: per-payload Python overhead (header packing, stage dispatch) dominates
+#: — exactly the regime the vectorized plane exists for.
+BATCH_SPECS = (
+    "int8(1024)",
+    "topk(0.01)|int8(256)",
+    "delta|ef|topk(0.01)|int8(1024)",
+)
+BATCH_CLIENTS = (1, 16, 64, 256)
+BATCH_PARAMS = 256
+#: The CI gate: combined encode+decode speedup the numpy batch path must
+#: clear at this many clients (ISSUE 9 acceptance).
+BATCH_GATE_CLIENTS = 256
+BATCH_GATE_SPEEDUP = 4.0
+
+
+def _bench_batch_point(pipeline, vecs, repeats: int) -> dict:
+    """One (spec, n_clients) point: loop vs batch.  Stateful/delta
+    pipelines get fresh per-rep states so both paths do identical work;
+    stateless ones run with no caller state, the shape the server's hot
+    path actually uses.  Each side reports the best of three timed blocks
+    (min damps scheduler/allocator noise in shared CI containers)."""
+    n_clients = len(vecs)
+    needs_state = pipeline.caps.stateful or pipeline.caps.delta_domain
+
+    def loop_once():
+        if not needs_state:
+            datas = [pipeline.encode(v) for v in vecs]
+        else:
+            states = [_fresh_state(pipeline, vecs[0])
+                      for _ in range(n_clients)]
+            datas = [pipeline.encode(v, s) for v, s in zip(vecs, states)]
+        for d in datas:
+            decode_payload(d)
+        return datas
+
+    def batch_once():
+        if not needs_state:
+            datas = pipeline.encode_batch(vecs)
+        else:
+            states = [_fresh_state(pipeline, vecs[0])
+                      for _ in range(n_clients)]
+            datas = pipeline.encode_batch(vecs, states)
+        decode_payload_batch(datas)
+        return datas
+
+    def best_of(fn, trials=3):
+        best = float("inf")
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fn()
+            best = min(best, (time.perf_counter() - t0) / repeats)
+        return best
+
+    loop_bytes, batch_bytes = loop_once(), batch_once()   # warm + parity
+    loop_s = best_of(loop_once)
+    batch_s = best_of(batch_once)
+
+    in_mb = n_clients * vecs[0].size * 4 / 1e6
+    return {
+        "n_clients": n_clients,
+        "loop_us": loop_s * 1e6,
+        "batch_us": batch_s * 1e6,
+        "loop_mb_s": in_mb / loop_s,
+        "batch_mb_s": in_mb / batch_s,
+        "speedup": loop_s / batch_s,
+        "bytes_identical": batch_bytes == loop_bytes,
+    }
+
+
+def run_batch_sweep(repeats: int) -> list[dict]:
+    rng = np.random.default_rng(0)
+    out = []
+    for spec in BATCH_SPECS:
+        pipeline = parse_pipeline(spec)
+        points = []
+        for n_clients in BATCH_CLIENTS:
+            vecs = [rng.standard_normal(BATCH_PARAMS).astype(np.float32)
+                    for _ in range(n_clients)]
+            points.append(_bench_batch_point(pipeline, vecs, repeats))
+        out.append({"spec": pipeline.spec, "n_params": BATCH_PARAMS,
+                    "points": points})
+    return out
+
+
+def _batch_gate_failures(sweep: list[dict]) -> list[str]:
+    """CI gate: parity everywhere; >=BATCH_GATE_SPEEDUP at the gate point
+    for at least one swept spec (the gate pins the *plane*, not every
+    composition — a raw-dominated spec has less overhead to amortize)."""
+    failures = []
+    best_at_gate = 0.0
+    for entry in sweep:
+        for pt in entry["points"]:
+            if not pt["bytes_identical"]:
+                failures.append(f"{entry['spec']} @N={pt['n_clients']}: "
+                                f"batch bytes != loop bytes")
+            if pt["n_clients"] == BATCH_GATE_CLIENTS:
+                best_at_gate = max(best_at_gate, pt["speedup"])
+    if best_at_gate < BATCH_GATE_SPEEDUP:
+        failures.append(
+            f"batch speedup at {BATCH_GATE_CLIENTS} clients is "
+            f"{best_at_gate:.2f}x (< {BATCH_GATE_SPEEDUP:.1f}x gate)")
+    return failures
+
+
 def run(n_params: int, repeats: int) -> dict:
     rng = np.random.default_rng(0)
     vec = rng.standard_normal(n_params).astype(np.float32)
+    batch_sweep = run_batch_sweep(repeats)
     return {
         "n_params": n_params,
         "repeats": repeats,
         "pipelines": [_bench_spec(s, vec, repeats) for s in SPECS],
+        "batch_sweep": batch_sweep,
+        "batch_gate": {
+            "n_clients": BATCH_GATE_CLIENTS,
+            "required_speedup": BATCH_GATE_SPEEDUP,
+            "failures": _batch_gate_failures(batch_sweep),
+        },
         "determinism_failures": _determinism_check(vec),
     }
 
@@ -139,8 +260,18 @@ def bench():
             f";enc_mb_s={p['encode_mb_s']:.0f}"
             f";dec_mb_s={p['decode_mb_s']:.0f}",
         ))
-    status = ("ok" if not report["determinism_failures"]
-              else ";".join(report["determinism_failures"]))
+    for entry in report["batch_sweep"]:
+        gate_pt = entry["points"][-1]
+        rows.append((
+            f"wire_batch/{entry['spec']}@{gate_pt['n_clients']}",
+            gate_pt["batch_us"],
+            f"speedup={gate_pt['speedup']:.2f}x"
+            f";batch_mb_s={gate_pt['batch_mb_s']:.0f}"
+            f";bytes_identical={gate_pt['bytes_identical']}",
+        ))
+    failures = (report["determinism_failures"]
+                + report["batch_gate"]["failures"])
+    status = "ok" if not failures else ";".join(failures)
     rows.append(("wire/determinism", 0.0, status))
     return rows
 
@@ -160,17 +291,28 @@ def main() -> None:
               f"enc {p['encode_mb_s']:8.0f} MB/s  "
               f"dec {p['decode_mb_s']:8.0f} MB/s  "
               f"max_err {p['max_abs_err']:.2e}")
+    print(f"\nbatch plane (P={BATCH_PARAMS}, encode+decode, "
+          f"batch vs loop):")
+    for entry in report["batch_sweep"]:
+        cells = "  ".join(
+            f"N={pt['n_clients']:<3d} {pt['speedup']:5.2f}x"
+            for pt in entry["points"])
+        print(f"{entry['spec']:34s} {cells}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {args.out}")
-    if report["determinism_failures"]:
-        for fail in report["determinism_failures"]:
-            print(f"DETERMINISM FAILURE: {fail}", file=sys.stderr)
+    failures = (report["determinism_failures"]
+                + report["batch_gate"]["failures"])
+    if failures:
+        for fail in failures:
+            print(f"WIRE GATE FAILURE: {fail}", file=sys.stderr)
         if args.check:
             sys.exit(1)
     elif args.check:
-        print("determinism check: ok")
+        print(f"determinism check: ok; batch gate: ok "
+              f"(>= {BATCH_GATE_SPEEDUP:.0f}x at "
+              f"{BATCH_GATE_CLIENTS} clients)")
 
 
 if __name__ == "__main__":

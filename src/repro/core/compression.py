@@ -103,6 +103,53 @@ def dequantize_int8(q: np.ndarray, scales: np.ndarray, n: int,
     return out[:n]
 
 
+def quantize_int8_batch(mat: np.ndarray, block: int = 1024
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Row-wise :func:`quantize_int8` over an ``(N, P)`` matrix in one shot:
+    returns ``(q (N, nb*block) int8, scales (N, nb) f32)``.
+
+    Bit-identical to quantizing each row separately — every op (absmax
+    reduce, divide, rint, clip) is per-block elementwise, so batching
+    cannot change a single rounding decision.  The wire batch plane
+    (``repro.core.wire``) relies on that for its byte-identity contract.
+    """
+    mat = np.asarray(mat, dtype=np.float32)
+    n_items, n = mat.shape
+    nb = -(-n // block)
+    if n == nb * block:
+        padded = np.ascontiguousarray(mat)     # aligned: skip the pad copy
+    else:
+        padded = np.zeros((n_items, nb * block), dtype=np.float32)
+        padded[:, :n] = mat
+    blocks = padded.reshape(n_items * nb, block) if nb else \
+        padded.reshape(0, block)
+    if blocks.shape[0]:
+        # max(row.max, -row.min) == |row|.max without materializing |row|.
+        scales = np.maximum(blocks.max(axis=1), -blocks.min(axis=1))
+        np.maximum(scales, 1e-12, out=scales)
+        scales /= 127.0
+        q = blocks / scales[:, None]
+        np.rint(q, out=q)
+        np.clip(q, -127, 127, out=q)
+        q = q.astype(np.int8)
+    else:
+        scales = np.zeros(0, np.float32)
+        q = blocks.astype(np.int8)
+    return (q.reshape(n_items, nb * block),
+            scales.astype(np.float32, copy=False).reshape(n_items, nb))
+
+
+def dequantize_int8_batch(q: np.ndarray, scales: np.ndarray, n: int,
+                          block: int = 1024) -> np.ndarray:
+    """Row-wise :func:`dequantize_int8`: ``(N, nb*block) -> (N, n)``,
+    bit-identical to per-row dequantization (one elementwise multiply)."""
+    out = np.asarray(q, dtype=np.int8).astype(np.float32)
+    n_items, nb = scales.shape
+    view = out.reshape(n_items, nb, block)
+    view *= np.asarray(scales, np.float32)[:, :, None]
+    return out.reshape(n_items, nb * block)[:, :n]
+
+
 @dataclasses.dataclass
 class Int8Codec(Codec):
     """Wire layout: n(u64) block(u32) nb(u32) | scales f32[nb] | int8[nb*block]."""

@@ -173,6 +173,12 @@ class FleetConfig:
     # buffer_k is the aggregation trigger.
     mode: str = "sync"
     buffer_k: int = 8
+    # Batched wire plane (repro.core.wire batch API): decode all arrived
+    # uplink payloads in one stacked pass per aggregation and serve a
+    # cached broadcast encode when the downlink pipeline is stateless.
+    # Byte/bit-identical to the per-client loop, so this is purely a
+    # throughput knob; False restores eager per-delivery decode.
+    batch_wire: bool = True
     # Wire plane (repro.core.wire): per-direction pipeline specs, forwarded
     # onto the TransportConfig by build_fleet().  None keeps whatever the
     # FLConfig's transport already says (usually the legacy codec).

@@ -72,7 +72,12 @@ class SyncScheduler:
         self._round_open = False
         self._roster: dict[str, FLClient] = {}
         self._resolved: set[str] = set()
-        self._updates: dict = {}           # addr -> flat vector
+        # addr -> update token: a flat f32 vector, or an opaque pending
+        # handle (core._PendingWire) when cfg.batch_wire defers wire decode
+        # to the aggregation boundary.  Schedulers never inspect the value
+        # — it flows straight into core.apply_aggregation, which resolves
+        # pendings in one stacked batch decode.
+        self._updates: dict = {}
         self._failed: list[str] = []
         self._deadline_timer = None
         self._late_folded = 0
@@ -158,6 +163,8 @@ class SyncScheduler:
 
     def on_uplink(self, session: Optional[ClientSession], addr: str,
                   txn: int, vec) -> None:
+        # `vec` is an opaque update token (flat vector, or a pending wire
+        # handle under cfg.batch_wire) — stored, never inspected here.
         if session is None:
             return   # txn of a cleared round: cannot occur (rounds drain)
         if session.round_idx != self._round_idx or not self._round_open:
@@ -372,6 +379,9 @@ class AsyncScheduler:
 
     def on_uplink(self, session: Optional[ClientSession], addr: str,
                   txn: int, vec) -> None:
+        # `vec` is an opaque update token (flat vector, or a pending wire
+        # handle under cfg.batch_wire); it is buffered untouched and only
+        # decoded when _flush() hands the batch to apply_aggregation.
         if session is None or session.state in (ARRIVED, FAILED):
             return
         was_timeout = session.state == TIMEOUT

@@ -45,6 +45,7 @@ from repro.core.transport import (Delivery, Transport, TransportConfig,
                                   make_transport, validate_transport_kind)
 from repro.core.wire import (Pipeline, PipelineState, WireDecodeError,
                              decode_payload as wire_decode_payload,
+                             decode_payload_batch as wire_decode_payload_batch,
                              legacy_pipeline, parse_pipeline)
 
 
@@ -103,6 +104,14 @@ class FLConfig:
     # keep everything, discounted).  Dropped counts surface in
     # RoundResult.metrics["stale_dropped"].
     max_staleness: Optional[int] = None
+    # Batched wire-plane (repro.core.wire batch API): uplink payloads are
+    # decoded in one vectorized pass per aggregation instead of one call
+    # per delivery, and a stateless downlink broadcast is encoded once per
+    # model version and the bytes reused across clients.  Both paths are
+    # bit-identical to the per-client loop (pinned by the orchestrator-
+    # equivalence digests, which run with this default), so False exists
+    # only to time the difference and to simplify debugging.
+    batch_wire: bool = True
 
     def __post_init__(self) -> None:
         # Fail at construction time (with the registered names) rather than
@@ -272,6 +281,29 @@ class ClientSession:
         return self.client.addr
 
 
+class _PendingWire:
+    """An uplink payload whose decode is deferred to aggregation time.
+
+    With ``FLConfig.batch_wire`` the server hands schedulers one of these
+    instead of a decoded vector; schedulers treat updates as opaque until
+    :meth:`ServerCore.apply_aggregation`, which resolves every pending
+    payload in one :func:`repro.core.wire.decode_payload_batch` call.
+    Decode is pure computation (no simulator events), so deferring it
+    cannot move any event time or order.
+    """
+
+    __slots__ = ("data", "vec")
+
+    def __init__(self, data: bytes):
+        self.data: Optional[bytes] = data
+        self.vec: Optional[np.ndarray] = None
+
+    def __repr__(self) -> str:
+        state = "decoded" if self.vec is not None else \
+            f"{len(self.data)}B pending"
+        return f"_PendingWire({state})"
+
+
 # --------------------------------------------------------------------------
 # The server core
 # --------------------------------------------------------------------------
@@ -319,6 +351,9 @@ class ServerCore:
         # Payloads that failed to decode and were explicitly degraded to a
         # zero vector (WireDecodeError — never a bare except).
         self.decode_errors = 0
+        # Broadcast-encode cache accounting: how many downlinks reused the
+        # per-model-version encoded bytes instead of re-encoding.
+        self.bcast_cache_hits = 0
         self.history: list[RoundResult] = []
         self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
 
@@ -359,7 +394,9 @@ class ServerCore:
         self._sessions_down: dict[tuple[str, int], ClientSession] = {}
         self._txn_counter = 0
         # Stragglers from closed sync rounds: (virtual round, addr, vec).
-        self.late_buffer: list[tuple[int, str, np.ndarray]] = []
+        # With batch_wire the third element may be a still-encoded
+        # _PendingWire, resolved at the aggregation it folds into.
+        self.late_buffer: list[tuple[int, str, Any]] = []
         # Monotonic retransmission counter (sender stats folded in on
         # completion or failure); schedulers snapshot + delta per window.
         self.retx_total = 0
@@ -377,8 +414,12 @@ class ServerCore:
         # Invalidate the cached flat size: recomputed at most once per
         # assignment (i.e. per aggregation) instead of once per uplink
         # delivery — a full pytree flatten used to sit on the hot path.
+        # The broadcast-encode cache rides the same invalidation: any model
+        # update (aggregation, external assignment) drops the cached bytes,
+        # so a stale broadcast can never be served.
         self._global_params = value
         self._n_params: Optional[int] = None
+        self._bcast_cache: Optional[bytes] = None
 
     @property
     def n_params(self) -> int:
@@ -457,14 +498,42 @@ class ServerCore:
         return self._sessions_up.get((addr, txn))
 
     # -- downlink: server -> client -------------------------------------------
+    def broadcast_payload(self) -> Optional[bytes]:
+        """The current model's encoded broadcast bytes, cached per model
+        version — or None when per-client encoding is required.
+
+        A stateless downlink pipeline encodes the same model to the same
+        bytes for every client (deterministic, pinned by wire_bench's
+        determinism gate), so the N-client broadcast encodes **once** and
+        reuses the bytes.  The cache is refused outright when the downlink
+        pipeline is stateful (``PipelineCaps.stateful`` — e.g. ``ef|int8``
+        compensates each client separately, so sharing bytes would corrupt
+        per-client residuals) and invalidated on every ``global_params``
+        assignment, so a stale model can never be served.
+        """
+        if not self.cfg.batch_wire or self.downlink_pipeline.caps.stateful:
+            return None
+        if self._bcast_cache is None:
+            self._bcast_cache = self.packetizer.encode_bytes(
+                self.global_params)
+        else:
+            self.bcast_cache_hits += 1
+        return self._bcast_cache
+
     def begin_downlink(self, session: ClientSession) -> None:
         """Broadcast the current global model to the session's client
         through the downlink pipeline (per-client state: a stateful
-        downlink, e.g. ``ef|int8``, compensates each client separately)."""
+        downlink, e.g. ``ef|int8``, compensates each client separately —
+        such pipelines bypass the broadcast cache)."""
         session.state = DOWNLINK
-        packets = self.packetizer.to_packets(
-            self.global_params, self.server_addr, session.txn_down,
-            state=self.wire_state(session.addr, direction="downlink"))
+        data = self.broadcast_payload()
+        if data is not None:
+            packets = packetize(data, self.server_addr, session.txn_down,
+                                self.packetizer.mtu)
+        else:
+            packets = self.packetizer.to_packets(
+                self.global_params, self.server_addr, session.txn_down,
+                state=self.wire_state(session.addr, direction="downlink"))
         self._make_sender(self.server_node,
                           self.sim.node(session.addr), packets,
                           session).start()
@@ -580,7 +649,18 @@ class ServerCore:
     def _on_server_delivery(self, d: Delivery) -> None:
         if not d.complete and not self.transport.caps.partial_delivery:
             return  # a reliable transport never hands over a partial payload
-        vec = self.decode_vec(d.reassemble())
+        if self.cfg.batch_wire:
+            # Defer the decode: schedulers store updates opaquely until
+            # aggregation, where every pending payload of the window
+            # decodes in one vectorized batch (decode is pure computation,
+            # so deferring it cannot move an event).  One caveat, by
+            # design: a payload the scheduler *drops* before aggregating
+            # (async max_staleness) is never decoded, so a malformed one
+            # no longer bumps decode_errors — it contributes nothing
+            # either way.
+            vec: Any = _PendingWire(d.reassemble())
+        else:
+            vec = self.decode_vec(d.reassemble())
         session = self.uplink_session(d.sender_addr, d.txn)
         self.scheduler.on_uplink(session, d.sender_addr, d.txn, vec)
 
@@ -625,6 +705,57 @@ class ServerCore:
                 [vec, np.zeros(n_expected - vec.size, dtype=np.float32)])
         return vec[:n_expected]
 
+    def decode_vec_batch(self, datas: list[bytes]) -> np.ndarray:
+        """Batched :meth:`decode_vec` over uplink payloads: one ``(N,
+        n_params)`` float32 matrix, row i bit-identical to
+        ``decode_vec(datas[i])`` — including the per-item degradation
+        contract: a malformed payload zero-fills *its* row and bumps
+        ``decode_errors``; it never poisons the rest of the batch
+        (``decode_payload_batch`` isolates it via per-item fallback)."""
+        n_expected = self.n_params
+        pipeline = self.uplink_pipeline
+        out = np.zeros((len(datas), n_expected), dtype=np.float32)
+        if pipeline.self_describing:
+            for i, (vec, negotiated, err) in enumerate(
+                    wire_decode_payload_batch(datas)):
+                if err is None and (negotiated.caps.delta_domain
+                                    != pipeline.caps.delta_domain):
+                    # Same policy refusal as decode_vec: a header whose
+                    # delta-ness disagrees with the server's aggregation
+                    # domain is degraded, not mis-aggregated.
+                    vec = None
+                if vec is None:
+                    self.decode_errors += 1
+                    continue
+                m = min(vec.size, n_expected)
+                out[i, :m] = vec[:m]
+            return out
+        for i, data in enumerate(datas):
+            try:
+                vec = pipeline.decode(data)
+            except WireDecodeError:
+                self.decode_errors += 1
+                continue
+            m = min(vec.size, n_expected)
+            out[i, :m] = vec[:m]
+        return out
+
+    def _resolve_contribs(self, contribs: list) -> list:
+        """Materialize any deferred (_PendingWire) updates in ``contribs``
+        through one batched decode; pass decoded vectors through
+        untouched.  The stacked matrix rows stream straight into the
+        aggregation stack below, so a 256-client round does one vectorized
+        wire pass instead of 256 pipeline walks."""
+        pending = [v for v, _ in contribs
+                   if isinstance(v, _PendingWire) and v.vec is None]
+        if pending:
+            mat = self.decode_vec_batch([p.data for p in pending])
+            for p, row in zip(pending, mat):
+                p.vec = row
+                p.data = None     # the bytes are dead weight once decoded
+        return [(v.vec if isinstance(v, _PendingWire) else v, w)
+                for v, w in contribs]
+
     # -- staleness -----------------------------------------------------------
     def staleness_factor(self, age: int) -> tuple[float, bool]:
         """``discount**age`` clamped to ``staleness_floor``: a stale update
@@ -659,6 +790,11 @@ class ServerCore:
         ``send_deltas`` flag derives it)."""
         if not contribs:
             return
+        # Batched wire-plane: updates arrive still-encoded (_PendingWire)
+        # under batch_wire; decode them all in one vectorized pass BEFORE
+        # the zero-weight filter so decode_errors accounting matches the
+        # per-delivery mode for every payload that reached aggregation.
+        contribs = self._resolve_contribs(contribs)
         # An empty-handed hierarchical edge forwards its unchanged model
         # with weight 0 (so the parent barrier still resolves); such
         # contributions carry no information and an all-zero-weight fold

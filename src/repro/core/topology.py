@@ -175,6 +175,7 @@ class StarTopology(Topology):
             round_deadline_ns=fleet.round_deadline_ns,
             mode=fleet.mode,
             buffer_k=fleet.buffer_k,
+            batch_wire=fleet.batch_wire,
         )
         sim = Simulator(engine=fleet.engine)
         clients = []
@@ -445,6 +446,7 @@ class HierTopology(Topology):
             # An async root can never buffer more than one update per edge
             # in a window, so a star-calibrated buffer_k would stall.
             buffer_k=min(fleet.buffer_k, cells),
+            batch_wire=fleet.batch_wire,
         )
         cell_transport = dataclasses.replace(
             base_t,
@@ -484,6 +486,7 @@ class HierTopology(Topology):
                 # stability); one shared seed would correlate roster draws.
                 participation_seed=fleet.seed * 1009 + m + 1,
                 round_deadline_ns=fleet.round_deadline_ns,
+                batch_wire=fleet.batch_wire,
             )
             cell_clients = [
                 FLClient(p.addr, train_fn_factory(i, p),

@@ -39,6 +39,20 @@ mutable (delta references, EF residuals) lives in a :class:`PipelineState`
 created per (endpoint, direction) via :meth:`Pipeline.new_state`.  Decode
 is stateless for every built-in stage, which is what makes decoding from
 the header alone possible.
+
+**Batch plane.**  Every stage also exposes ``encode_batch`` /
+``decode_batch`` over stacked ``(N, P)`` matrices (base-class fallbacks
+loop; the built-ins override with vectorized numpy and optional Pallas
+kernel paths — see :func:`set_batch_backend`).  :meth:`Pipeline.
+encode_batch`, :meth:`Pipeline.decode_batch` and
+:func:`decode_payload_batch` walk all N clients through each stage in one
+call: per-client state (delta refs, EF residuals) is gathered into an
+``(N, P)`` slab on entry and scattered back into the per-client
+:class:`PipelineState` slots on exit, so batched and looped execution see
+the exact same state evolution.  The contract is strict: batch encode is
+byte-identical to the per-item loop and batch decode bit-identical, which
+is what lets the orchestrator batch by default without moving any of the
+24 pinned equivalence digests.
 """
 
 from __future__ import annotations
@@ -52,7 +66,8 @@ import numpy as np
 
 from repro.core.compression import (MAX_DECODE_PARAMS, HexCodec, Int8Codec,
                                     RawCodec, TopKCodec, dequantize_int8,
-                                    quantize_int8, topk_sparsify)
+                                    dequantize_int8_batch, quantize_int8,
+                                    quantize_int8_batch, topk_sparsify)
 
 _U16 = struct.Struct("!H")
 _U32 = struct.Struct("!I")
@@ -132,6 +147,19 @@ class Stage(abc.ABC):
     (decode∘encode is the identity), ``stateful`` (encode reads/writes the
     slot), ``est_ratio`` (estimated encoded-bytes / input-bytes, used by
     planners and benchmarks — an estimate, not a promise).
+
+    **Batch twins.**  ``encode_batch`` / ``decode_batch`` process N stacked
+    items at once; the base-class versions loop over ``encode`` /
+    ``decode`` and set ``batch_capable = False``, which makes the pipeline
+    take the per-item path.  A vectorized override must (a) set
+    ``batch_capable = True``, (b) be byte-identical on encode and
+    bit-identical on decode to the loop (the parity sweep in
+    ``tests/test_wire_batch.py`` pins every built-in), and (c) raise
+    :class:`WireDecodeError` when the group's per-item params are not
+    uniform enough to vectorize — the caller then degrades to per-item
+    decode.  A subclass that overrides ``encode``/``decode`` without
+    overriding the batch twins must reset ``batch_capable = False`` or the
+    inherited vectorized twin will silently bypass its override.
     """
 
     name: str = "abstract"
@@ -178,6 +206,43 @@ class Stage(abc.ABC):
                             f"legacy (headerless) pipeline")
         return self.legacy_codec.decode(data)
 
+    # -- batch plane ---------------------------------------------------------
+    #: True when encode_batch/decode_batch are genuinely vectorized.  The
+    #: base-class fallbacks below just loop — correct for any stage — so a
+    #: Pipeline only takes the one-call batched walk when EVERY stage
+    #: opts in.
+    batch_capable: bool = False
+
+    def encode_batch(self, batch: np.ndarray, slots: Sequence[dict]
+                     ) -> tuple[np.ndarray, list[bytes]]:
+        """Encode N stacked items: ``(N, P) -> ((N, P'), [params] * N)``.
+
+        ``slots[i]`` is item i's per-(endpoint, direction) state dict —
+        the same object :meth:`encode` would receive.  Fallback: loops
+        over :meth:`encode` one row at a time and stacks the outputs
+        (raising :class:`WireError` if a stage produces ragged rows).
+        """
+        rows, params = [], []
+        for i in range(batch.shape[0]):
+            arr, p = self.encode(batch[i], slots[i])
+            rows.append(arr)
+            params.append(p)
+        return _stack_rows(rows, self.spec()), params
+
+    def decode_batch(self, arr: np.ndarray, params: Sequence[bytes],
+                     slots: Sequence[dict]) -> np.ndarray:
+        """Inverse of :meth:`encode_batch` over a rectangular group.
+
+        Callers only attempt batch decode on groups that are already
+        uniform in spec, body dtype and body length; an override must
+        still verify the per-item *params* agree (e.g. one topk count for
+        the whole group) and raise :class:`WireDecodeError` otherwise —
+        the caller then isolates the odd item via per-item decode.
+        """
+        rows = [self.decode(arr[i], params[i], slots[i])
+                for i in range(arr.shape[0])]
+        return _stack_rows(rows, self.spec())
+
 
 def _require_f4(arr: np.ndarray, stage: str) -> np.ndarray:
     arr = np.asarray(arr)
@@ -185,6 +250,109 @@ def _require_f4(arr: np.ndarray, stage: str) -> np.ndarray:
         raise WireError(f"stage {stage!r} requires a float32 input, got "
                         f"{arr.dtype} (check stage order in the spec)")
     return arr
+
+
+def _require_f4_batch(batch: np.ndarray, stage: str) -> np.ndarray:
+    batch = np.asarray(batch)
+    if batch.ndim != 2:
+        raise WireError(f"stage {stage!r} batch input must be 2-D (N, P), "
+                        f"got shape {batch.shape}")
+    if batch.dtype != np.dtype("<f4"):
+        raise WireError(f"stage {stage!r} requires a float32 input, got "
+                        f"{batch.dtype} (check stage order in the spec)")
+    return batch
+
+
+def _stack_rows(rows: Sequence[np.ndarray], what: str) -> np.ndarray:
+    """Stack per-item outputs into a rectangle, or explain why we cannot."""
+    if not rows:
+        return np.zeros((0, 0), dtype=np.float32)
+    arrs = [np.asarray(r) for r in rows]
+    if len({a.shape for a in arrs}) != 1:
+        raise WireError(f"{what!r} produced ragged batch rows (shapes "
+                        f"{sorted({a.shape for a in arrs})}); batch calls "
+                        f"need a rectangle")
+    return np.stack(arrs)
+
+
+# --------------------------------------------------------------------------
+# Batch backend: vectorized numpy (default) or Pallas stage kernels
+# --------------------------------------------------------------------------
+WIRE_BATCH_BACKENDS = ("numpy", "pallas", "auto")
+
+_BATCH_BACKEND = "numpy"
+
+#: Rows per vectorized walk are capped so the chunk's working set stays
+#: cache-resident: a monolithic (256, 250k) walk streams every
+#: intermediate through DRAM and loses to the per-item loop, while
+#: a few-MB chunk keeps the batch plane ahead at every size.  Per-item
+#: independence makes chunking invisible to the byte/bit-identity
+#: contract.
+_BATCH_CHUNK_ELEMS = 1 << 20
+
+
+def _batch_chunk_rows(row_elems: int) -> int:
+    return max(1, _BATCH_CHUNK_ELEMS // max(1, row_elems))
+
+
+def batch_backend() -> str:
+    """The active vectorized-stage backend (``"numpy"`` or ``"pallas"``)."""
+    return _BATCH_BACKEND
+
+
+def set_batch_backend(name: str) -> str:
+    """Select the batch-stage backend; returns the previous one.
+
+    ``"numpy"`` (the default) is pure vectorized numpy — byte-identical to
+    the per-item loop by construction, requires no device, and is what the
+    orchestrator ships with.  ``"pallas"`` routes the hot inner ops
+    through the Pallas kernels under ``repro.kernels`` — int8
+    (de)quantize at the kernel's 1024 block via ``kernels/quantize``,
+    top-k gather/scatter via ``kernels/topk`` — with parity pinned in
+    ``tests/test_kernel_parity.py``.  ``"auto"`` resolves to pallas when
+    the kernels import (JAX present), else numpy.  Stages whose params
+    fall outside a kernel's tile contract (e.g. ``int8(512)``) silently
+    keep the numpy path, so flipping the backend never changes bytes.
+    """
+    global _BATCH_BACKEND
+    if name not in WIRE_BATCH_BACKENDS:
+        raise WireError(f"unknown batch backend {name!r}; choose from "
+                        f"{WIRE_BATCH_BACKENDS}")
+    if name == "auto":
+        name = "pallas" if (_topk_kernel_ops() is not None
+                            and _quantize_kernel_ops() is not None) \
+            else "numpy"
+    prev = _BATCH_BACKEND
+    _BATCH_BACKEND = name
+    return prev
+
+
+_TOPK_OPS = None
+_QUANT_OPS = None
+
+
+def _topk_kernel_ops():
+    """``repro.kernels.topk.ops``, or None when JAX is unavailable."""
+    global _TOPK_OPS
+    if _TOPK_OPS is None:
+        try:
+            from repro.kernels.topk import ops
+            _TOPK_OPS = ops
+        except Exception:
+            _TOPK_OPS = False
+    return _TOPK_OPS or None
+
+
+def _quantize_kernel_ops():
+    """``repro.kernels.quantize.ops``, or None when JAX is unavailable."""
+    global _QUANT_OPS
+    if _QUANT_OPS is None:
+        try:
+            from repro.kernels.quantize import ops
+            _QUANT_OPS = ops
+        except Exception:
+            _QUANT_OPS = False
+    return _QUANT_OPS or None
 
 
 # --------------------------------------------------------------------------
@@ -221,6 +389,31 @@ class DeltaStage(Stage):
     def decode(self, arr, params, slot):
         return arr
 
+    batch_capable = True
+
+    def encode_batch(self, batch, slots):
+        batch = _require_f4_batch(batch, self.name)
+        refs = [slot.get("ref") for slot in slots]
+        for ref in refs:
+            if ref is not None and ref.size != batch.shape[1]:
+                raise WireError(f"delta reference has {ref.size} params, "
+                                f"update has {batch.shape[1]}")
+        if all(ref is None for ref in refs):
+            out = batch
+        elif any(ref is None for ref in refs):
+            # Mixed priming (some endpoints have never seen a model):
+            # subtract row-wise, unprimed rows pass through untouched.
+            out = batch.copy()
+            for i, ref in enumerate(refs):
+                if ref is not None:
+                    out[i] = batch[i] - ref
+        else:
+            out = batch - np.stack(refs)
+        return out, [b""] * batch.shape[0]
+
+    def decode_batch(self, arr, params, slots):
+        return arr
+
 
 class ErrorFeedbackStage(Stage):
     """Residual compensation (Seide et al. 2014) for everything downstream.
@@ -253,6 +446,37 @@ class ErrorFeedbackStage(Stage):
                         "it cannot be encoded standalone")
 
     def decode(self, arr, params, slot):
+        return arr
+
+    # Batch twins of compensate/update: one add / one subtract across the
+    # (N, P) slab, with residual rows gathered from / scattered back to the
+    # per-client slots.  Subclasses overriding compensate/update must
+    # override these too (or reset batch_capable) — see the Stage docs.
+    batch_capable = True
+
+    def compensate_batch(self, batch: np.ndarray,
+                         slots: Sequence[dict]) -> np.ndarray:
+        batch = _require_f4_batch(batch, self.name)
+        residuals = [slot.get("residual") for slot in slots]
+        if all(r is None for r in residuals):
+            return batch
+        if all(r is not None and r.size == batch.shape[1]
+               for r in residuals):
+            return batch + np.stack(residuals)
+        out = batch.copy()
+        for i, r in enumerate(residuals):
+            if r is not None:
+                out[i] = batch[i] + r
+        return out
+
+    def update_batch(self, compensated: np.ndarray, decoded: np.ndarray,
+                     slots: Sequence[dict]) -> None:
+        diff = compensated - decoded
+        for i, slot in enumerate(slots):
+            # copy() so a slot never pins the whole (N, P) slab alive.
+            slot["residual"] = diff[i].copy()
+
+    def decode_batch(self, arr, params, slots):
         return arr
 
 
@@ -311,6 +535,77 @@ class TopKStage(Stage):
         out[idx] = vals
         return out
 
+    batch_capable = True
+
+    def encode_batch(self, batch, slots):
+        batch = _require_f4_batch(batch, self.name)
+        n_items, n = batch.shape
+        k = min(n, max(1, int(n * self.k_fraction)))
+        if k <= 0:       # only when n == 0: an empty sparsification
+            idx = np.zeros((n_items, 0), dtype="<u4")
+            vals = np.zeros((n_items, 0), dtype="<f4")
+        else:
+            # Selection stays numpy even on the pallas backend:
+            # np.argpartition's introselect runs per row under axis=1, so
+            # each row picks the same index SET as the 1-D call inside
+            # topk_sparsify (pinned by the batch==loop parity sweep), and
+            # sorting makes the byte layout identical.
+            idx = np.sort(np.argpartition(np.abs(batch), -k, axis=1)[:, -k:],
+                          axis=1).astype("<u4")
+            ops = _topk_kernel_ops() if _BATCH_BACKEND == "pallas" else None
+            if ops is not None:
+                vals = np.asarray(ops.topk_gather(batch, idx), dtype="<f4")
+            else:
+                vals = np.take_along_axis(batch, idx.astype(np.int64),
+                                          axis=1)
+        head = _U64.pack(n)
+        # One bulk tobytes + C-level slicing beats n_items row tobytes.
+        blob, step = np.ascontiguousarray(idx).tobytes(), 4 * k
+        params = ([head + blob[o:o + step]
+                   for o in range(0, n_items * step, step)]
+                  if step else [head] * n_items)
+        return np.ascontiguousarray(vals, dtype="<f4"), params
+
+    def decode_batch(self, arr, params, slots):
+        if not params:
+            return np.zeros((0, 0), dtype=np.float32)
+        if len(params[0]) < 8:
+            raise WireDecodeError("topk params truncated")
+        head = params[0][:8]
+        if any(len(p) != len(params[0]) or p[:8] != head for p in params):
+            # Mixed n or k across the group: degrade to per-item decode
+            # rather than guess a rectangle.
+            raise WireDecodeError("topk batch group is not uniform")
+        n = _U64.unpack_from(head, 0)[0]
+        if n > MAX_DECODE_PARAMS:
+            raise WireDecodeError(f"topk n={n} exceeds MAX_DECODE_PARAMS "
+                                  f"({MAX_DECODE_PARAMS})")
+        vals = np.asarray(arr, dtype=np.float32)
+        n_items = vals.shape[0]
+        k, rem = divmod(len(params[0]) - 8, 4)
+        if rem or k != vals.shape[1]:
+            raise WireDecodeError(f"topk index/value count mismatch: "
+                                  f"{k} vs {vals.shape[1]}")
+        if k == 0:
+            return np.zeros((n_items, n), dtype=np.float32)
+        # Uniform group (checked above): join once, view as a (N, k) u4
+        # matrix past the 8-byte heads — no per-item frombuffer.
+        buf = np.frombuffer(b"".join(params), dtype=np.uint8)
+        idx = np.ascontiguousarray(
+            buf.reshape(n_items, 8 + 4 * k)[:, 8:]).view("<u4")
+        if n == 0 or int(idx.max()) >= n:
+            raise WireDecodeError("topk index out of range")
+        ops = _topk_kernel_ops() if _BATCH_BACKEND == "pallas" else None
+        if ops is not None:
+            return np.asarray(ops.topk_scatter(idx, vals, n),
+                              dtype=np.float32)
+        out = np.zeros((n_items, n), dtype=np.float32)
+        # Flat fancy assignment: duplicate indices resolve last-wins in
+        # row-major order, exactly like the per-item out[idx] = vals.
+        rows = np.repeat(np.arange(n_items), k)
+        out[rows, idx.reshape(-1).astype(np.int64)] = vals.reshape(-1)
+        return out
+
 
 class Int8Stage(Stage):
     """Blockwise absmax int8 quantization (the ``quantize`` kernel's wire
@@ -358,6 +653,62 @@ class Int8Stage(Stage):
                 f"{scales.size} / {q.size}")
         return dequantize_int8(q, scales.astype(np.float32), n, block)
 
+    batch_capable = True
+
+    def encode_batch(self, batch, slots):
+        batch = _require_f4_batch(batch, self.name)
+        n_items, n = batch.shape
+        ops = _quantize_kernel_ops() if _BATCH_BACKEND == "pallas" else None
+        if ops is not None and self.block == ops.QBLOCK and n:
+            q, scales = ops.quantize_matrix(batch)
+            q = np.asarray(q, dtype=np.int8)
+            scales = np.asarray(scales, dtype=np.float32)
+        else:
+            q, scales = quantize_int8_batch(batch, self.block)
+        head = _U64.pack(n) + _U32.pack(self.block)
+        blob = np.ascontiguousarray(scales, dtype="<f4").tobytes()
+        step = 4 * scales.shape[1]
+        params = ([head + blob[o:o + step]
+                   for o in range(0, n_items * step, step)]
+                  if step else [head] * n_items)
+        return q, params
+
+    def decode_batch(self, arr, params, slots):
+        if not params:
+            return np.zeros((0, 0), dtype=np.float32)
+        if len(params[0]) < 12:
+            raise WireDecodeError("int8 params truncated")
+        head = params[0][:12]
+        if any(len(p) != len(params[0]) or p[:12] != head for p in params):
+            raise WireDecodeError("int8 batch group is not uniform")
+        n = _U64.unpack_from(head, 0)[0]
+        block = _U32.unpack_from(head, 8)[0]
+        if block < 1:
+            raise WireDecodeError("int8 block must be >= 1")
+        q = np.asarray(arr)
+        if q.dtype != np.int8:
+            raise WireDecodeError(f"int8 body has dtype {q.dtype}, "
+                                  f"expected int8")
+        nb = -(-n // block) if n else 0
+        n_scales = (len(params[0]) - 12) // 4
+        if n_scales != nb or q.shape[1] != nb * block:
+            raise WireDecodeError(
+                f"int8 count mismatch: n={n} block={block} expects "
+                f"{nb} scales / {nb * block} values, got "
+                f"{n_scales} / {q.shape[1]}")
+        if nb:
+            buf = np.frombuffer(b"".join(params), dtype=np.uint8)
+            scales = np.ascontiguousarray(
+                buf.reshape(len(params), 12 + 4 * nb)[:, 12:]).view("<f4")
+            scales = scales.astype(np.float32, copy=False)
+        else:
+            scales = np.zeros((len(params), 0), dtype=np.float32)
+        ops = _quantize_kernel_ops() if _BATCH_BACKEND == "pallas" else None
+        if ops is not None and block == ops.QBLOCK and nb:
+            return np.asarray(ops.dequantize_matrix(q, scales, n),
+                              dtype=np.float32)
+        return dequantize_int8_batch(q, scales, n, block)
+
 
 # --------------------------------------------------------------------------
 # Terminal serializers: raw, hex
@@ -374,6 +725,15 @@ class RawStage(Stage):
         return np.ascontiguousarray(arr, dtype="<f4"), b""
 
     def decode(self, arr, params, slot):
+        return np.asarray(arr, dtype=np.float32)
+
+    batch_capable = True
+
+    def encode_batch(self, batch, slots):
+        batch = np.ascontiguousarray(batch, dtype="<f4")
+        return batch, [b""] * batch.shape[0]
+
+    def decode_batch(self, arr, params, slots):
         return np.asarray(arr, dtype=np.float32)
 
 
@@ -402,6 +762,43 @@ class HexStage(Stage):
         except binascii.Error as e:
             raise WireDecodeError(f"hex body is not hexadecimal: {e}") from e
         return np.frombuffer(raw, dtype=_BODY_DTYPES[params[0]]).copy()
+
+    batch_capable = True
+
+    def encode_batch(self, batch, slots):
+        # Rows are contiguous, so hexlifying the whole (N, P) buffer is the
+        # concatenation of the per-row hexlifys — one C call instead of N.
+        batch = np.ascontiguousarray(batch)
+        n_items = batch.shape[0]
+        code = _body_dtype_code(batch.dtype)
+        hexed = np.frombuffer(binascii.hexlify(batch.tobytes()),
+                              dtype=np.uint8)
+        out = (hexed.reshape(n_items, -1) if hexed.size
+               else np.zeros((n_items, 0), dtype=np.uint8))
+        return out, [bytes([code])] * n_items
+
+    def decode_batch(self, arr, params, slots):
+        if not params:
+            return np.zeros((0, 0), dtype=np.float32)
+        p0 = params[0]
+        if len(p0) != 1 or p0[0] >= len(_BODY_DTYPES):
+            raise WireDecodeError("hex params must be one dtype code")
+        if any(p != p0 for p in params):
+            raise WireDecodeError("hex batch group is not uniform")
+        arr = np.ascontiguousarray(arr)
+        n_items = arr.shape[0]
+        if arr.shape[1] % 2:
+            # Whole-buffer unhexlify would smear the odd row boundaries
+            # together; per-item decode raises here too.
+            raise WireDecodeError("hex body is not hexadecimal: "
+                                  "odd-length row")
+        try:
+            raw = binascii.unhexlify(arr.tobytes())
+        except binascii.Error as e:
+            raise WireDecodeError(f"hex body is not hexadecimal: {e}") from e
+        flat = np.frombuffer(raw, dtype=_BODY_DTYPES[p0[0]])
+        return (flat.reshape(n_items, -1) if flat.size
+                else np.zeros((n_items, 0), dtype=flat.dtype)).copy()
 
 
 # --------------------------------------------------------------------------
@@ -660,6 +1057,16 @@ class Pipeline:
         mode = "wire" if self.self_describing else "legacy"
         return f"Pipeline({self.spec!r}, {mode})"
 
+    @property
+    def batchable(self) -> bool:
+        """True when batch calls take the one-pass vectorized walk: a
+        self-describing pipeline whose every stage ships vectorized batch
+        twins.  Otherwise ``encode_batch``/``decode_batch`` still work but
+        loop per item (legacy pipelines always loop — their wire format is
+        the historical per-item one)."""
+        return self.self_describing and all(s.batch_capable
+                                            for s in self.stages)
+
     # -- state ---------------------------------------------------------------
     def new_state(self) -> PipelineState:
         return PipelineState(len(self.stages))
@@ -708,6 +1115,98 @@ class Pipeline:
             self.stages[i].update(comp, decoded, state.slots[i])
         header = WireHeader(self.spec, params, _body_dtype_code(arr.dtype))
         return header.pack() + np.ascontiguousarray(arr).tobytes()
+
+    def encode_batch(self, vecs: Sequence[np.ndarray],
+                     states: Optional[Sequence[Optional[PipelineState]]]
+                     = None) -> list[bytes]:
+        """Encode N same-length vectors in one vectorized stage walk.
+
+        Returns the same bytes, in order, as ``[self.encode(v, s) for
+        v, s in zip(vecs, states)]`` — byte-identical by contract — and
+        mutates the per-item states exactly as the loop would (delta refs
+        read, EF residuals written).  Falls back to that loop for legacy
+        pipelines, non-:attr:`batchable` stage sets, or ragged input
+        lengths, so it is always safe to call.
+        """
+        n_items = len(vecs)
+        if states is None:
+            states = [None] * n_items
+        elif len(states) != n_items:
+            raise WireError(f"encode_batch got {n_items} vectors but "
+                            f"{len(states)} states")
+        if n_items == 0:
+            return []
+        arrs = [np.ascontiguousarray(v, dtype=np.float32).reshape(-1)
+                for v in vecs]
+        if not self.batchable or len({a.size for a in arrs}) != 1:
+            return [self.encode(a, s) for a, s in zip(arrs, states)]
+        if (not self.caps.stateful and not self.caps.delta_domain
+                and all(s is None for s in states)):
+            # Stateless pipeline, no caller state: stages never write their
+            # slots (the caps contract), so one shared scratch state serves
+            # every item — skips N PipelineState allocations per call.
+            states = [self.new_state()] * n_items
+        else:
+            states = [self._state(s) for s in states]
+        chunk = _batch_chunk_rows(arrs[0].size)
+        if n_items > chunk:
+            out: list[bytes] = []
+            for o in range(0, n_items, chunk):
+                out.extend(self._encode_batch_walk(arrs[o:o + chunk],
+                                                   states[o:o + chunk]))
+            return out
+        return self._encode_batch_walk(arrs, states)
+
+    def _encode_batch_walk(self, arrs: Sequence[np.ndarray],
+                           states: Sequence[PipelineState]) -> list[bytes]:
+        """One vectorized stage walk over a (cache-sized) chunk of
+        same-length vectors; see :meth:`encode_batch`."""
+        n_items = len(arrs)
+        batch = np.stack(arrs)
+        slot_cols = [[st.slots[j] for st in states]
+                     for j in range(len(self.stages))]
+        arr = batch
+        params_cols: list[Sequence[bytes]] = []
+        ef_marks: list[tuple[int, np.ndarray]] = []
+        for j, stage in enumerate(self.stages):
+            if isinstance(stage, ErrorFeedbackStage):
+                arr = stage.compensate_batch(arr, slot_cols[j])
+                ef_marks.append((j, arr))
+                params_cols.append([b""] * n_items)
+                continue
+            arr, p = stage.encode_batch(arr, slot_cols[j])
+            if len(p) != n_items:
+                raise WireError(f"stage {stage.spec()!r} returned {len(p)} "
+                                f"params for {n_items} items")
+            params_cols.append(p)
+        for j, comp in reversed(ef_marks):
+            decoded = self._decode_tail_batch(arr, params_cols, j + 1)
+            self.stages[j].update_batch(comp, decoded, slot_cols[j])
+        dtype_code = _body_dtype_code(arr.dtype)
+        arr = np.ascontiguousarray(arr)
+        n_st = len(self.stages)
+        # Inline WireHeader.pack: the magic..n_stages prefix is shared by
+        # the whole batch, so build it once and join per-item params +
+        # body slices off bulk buffers (same bytes, no per-item objects).
+        spec_b = self.spec.encode("utf-8")
+        if len(spec_b) > 0xFFFF:
+            raise WireError("pipeline spec too long")
+        if n_st > 0xFF:
+            raise WireError("too many stages")
+        prefix = (WIRE_MAGIC + bytes([WIRE_VERSION]) + _U16.pack(len(spec_b))
+                  + spec_b + bytes([dtype_code, n_st]))
+        lens_cols = [[_U32.pack(len(p)) for p in col] for col in params_cols]
+        body = arr.tobytes()
+        row_b = arr.shape[1] * arr.itemsize if arr.ndim == 2 else 0
+        out = []
+        for i in range(n_items):
+            parts = [prefix]
+            for j in range(n_st):
+                parts.append(lens_cols[j][i])
+                parts.append(params_cols[j][i])
+            parts.append(body[i * row_b:(i + 1) * row_b])
+            out.append(b"".join(parts))
+        return out
 
     def _encode_legacy(self, vec: np.ndarray, state: PipelineState) -> bytes:
         arr = vec
@@ -806,6 +1305,121 @@ class Pipeline:
             vec = vec.copy()
         return vec
 
+    # -- batch decode ---------------------------------------------------------
+    def _decode_tail_batch(self, arr: np.ndarray,
+                           params_cols: Sequence[Sequence[bytes]],
+                           start: int) -> np.ndarray:
+        """Batched :meth:`_decode_tail` over a rectangular group.  Decode
+        is stateless for the built-ins, so every stage sees fresh empty
+        slots (same as wire negotiation)."""
+        n_items = arr.shape[0]
+        for j in range(len(self.stages) - 1, start - 1, -1):
+            # One shared dict: decode slots are read-only scratch for
+            # correctly-declared stages (anything that writes decode state
+            # must set PipelineCaps.stateful, which routes per-item).
+            slots = [{}] * n_items
+            try:
+                arr = self.stages[j].decode_batch(arr, params_cols[j], slots)
+            except WireDecodeError:
+                raise
+            except Exception as e:
+                raise WireDecodeError(
+                    f"stage {self.stages[j].spec()!r} failed to decode "
+                    f"batch: {type(e).__name__}: {e}") from e
+        return arr
+
+    def _decode_body_batch(self, headers: Sequence[WireHeader],
+                           datas: Sequence[bytes],
+                           offs: Sequence[int]) -> np.ndarray:
+        """Decode a *uniform* group (same spec, body dtype and body length
+        — the grouping :func:`decode_payload_batch` performs) in one
+        vectorized walk; returns the stacked ``(N, P)`` float32 matrix,
+        bit-identical to per-item :meth:`_decode_body`.  Any malformation
+        raises :class:`WireDecodeError`; the caller degrades to per-item
+        decode to isolate the offending payload."""
+        n_st = len(self.stages)
+        for h in headers:
+            if len(h.stage_params) != n_st:
+                raise WireDecodeError(
+                    f"header carries {len(h.stage_params)} stage params, "
+                    f"pipeline {self.spec!r} has {n_st} stages")
+        dtype = np.dtype(_BODY_DTYPES[headers[0].dtype_code])
+        body_len = len(datas[0]) - offs[0]
+        if body_len % dtype.itemsize:
+            raise WireDecodeError(
+                f"body length {body_len} is not a multiple of "
+                f"{dtype.itemsize}-byte {dtype} items")
+        count = body_len // dtype.itemsize
+        chunk = _batch_chunk_rows(count)
+        if len(datas) > chunk:
+            parts = [self._decode_body_batch(headers[o:o + chunk],
+                                             datas[o:o + chunk],
+                                             offs[o:o + chunk])
+                     for o in range(0, len(datas), chunk)]
+            if any(m.shape[1] != parts[0].shape[1] for m in parts[1:]):
+                # Uniform within each chunk but not across them (e.g.
+                # mixed topk n values): same refusal as the stage-level
+                # uniformity checks — degrade, don't guess a rectangle.
+                raise WireDecodeError("batch group is not uniform")
+            return np.concatenate(parts, axis=0)
+        off0 = offs[0]
+        if count <= 4096 and all(o == off0 for o in offs):
+            # Small rows, same header length everywhere: one join + one
+            # sliced copy beats N frombuffer calls' fixed overhead.
+            buf = np.frombuffer(b"".join(datas), dtype=np.uint8)
+            arr = np.ascontiguousarray(
+                buf.reshape(len(datas), off0 + body_len)[:, off0:]
+            ).view(dtype)
+        else:
+            # Large rows: copy overhead dominates call overhead, so fill
+            # a preallocated matrix from zero-copy frombuffer views —
+            # exactly one pass over the data.
+            arr = np.empty((len(datas), count), dtype=dtype)
+            for i, (d, off) in enumerate(zip(datas, offs)):
+                arr[i] = np.frombuffer(d, dtype=dtype, count=count,
+                                       offset=off)
+        params_cols = [[h.stage_params[j] for h in headers]
+                       for j in range(n_st)]
+        mat = np.asarray(self._decode_tail_batch(arr, params_cols, 0),
+                         dtype=np.float32)
+        if not mat.flags.writeable:
+            mat = mat.copy()
+        return mat
+
+    def decode_batch(self, datas: Sequence[bytes],
+                     states: Optional[Sequence[Optional[PipelineState]]]
+                     = None) -> np.ndarray:
+        """Decode N payloads of *this* pipeline into a stacked ``(N, P)``
+        float32 matrix, bit-identical to per-item :meth:`decode`.
+
+        Strict: any malformed item raises :class:`WireDecodeError` (the
+        server's per-item-degrading, negotiating entry point is
+        :func:`decode_payload_batch`).  Falls back to a per-item loop for
+        legacy pipelines, non-batchable stages, or a non-uniform group.
+        """
+        datas = list(datas)
+        if states is None:
+            states = [None] * len(datas)
+        if not datas:
+            return np.zeros((0, 0), dtype=np.float32)
+        if self.batchable:
+            headers, offs = [], []
+            for data in datas:
+                header, off = WireHeader.unpack(data)
+                if header.spec != self.spec:
+                    raise WireDecodeError(
+                        f"header names pipeline {header.spec!r}, this "
+                        f"pipeline is {self.spec!r} (use "
+                        f"decode_payload_batch for negotiation)")
+                headers.append(header)
+                offs.append(off)
+            key0 = (headers[0].dtype_code, len(datas[0]) - offs[0])
+            if all((h.dtype_code, len(d) - o) == key0
+                   for h, d, o in zip(headers, datas, offs)):
+                return self._decode_body_batch(headers, datas, offs)
+        return _stack_rows([self.decode(d, s)
+                            for d, s in zip(datas, states)], self.spec)
+
 
 # --------------------------------------------------------------------------
 # Wire negotiation: decode from the header alone
@@ -821,6 +1435,22 @@ _NEGOTIATED: dict[str, Pipeline] = {}
 _NEGOTIATED_CAP = 256
 
 
+def _negotiated_pipeline(spec: str) -> Pipeline:
+    """Memoized spec -> Pipeline for wire negotiation (see cache notes
+    above); raises WireDecodeError for unparseable specs."""
+    pipeline = _NEGOTIATED.get(spec)
+    if pipeline is None:
+        try:
+            pipeline = parse_pipeline(spec)
+        except WireError as e:
+            raise WireDecodeError(
+                f"header pipeline spec rejected: {e}") from e
+        if len(_NEGOTIATED) >= _NEGOTIATED_CAP:
+            _NEGOTIATED.clear()   # rare full reset beats unbounded growth
+        _NEGOTIATED[spec] = pipeline
+    return pipeline
+
+
 def decode_payload(data: bytes,
                    state: Optional[PipelineState] = None
                    ) -> tuple[np.ndarray, Pipeline]:
@@ -831,20 +1461,94 @@ def decode_payload(data: bytes,
     in the delta domain).  Raises WireDecodeError for anything malformed,
     including spec tokens naming unregistered stages."""
     header, off = WireHeader.unpack(data)
-    pipeline = _NEGOTIATED.get(header.spec)
-    if pipeline is None:
-        try:
-            pipeline = parse_pipeline(header.spec)
-        except WireError as e:
-            raise WireDecodeError(
-                f"header pipeline spec rejected: {e}") from e
-        if len(_NEGOTIATED) >= _NEGOTIATED_CAP:
-            _NEGOTIATED.clear()   # rare full reset beats unbounded growth
-        _NEGOTIATED[header.spec] = pipeline
+    pipeline = _negotiated_pipeline(header.spec)
     if state is not None and len(state.slots) != len(pipeline.stages):
         state = None   # negotiated spec changed shape; decode is stateless
     vec = pipeline._decode_body(header, data, off, state)
     return vec, pipeline
+
+
+def decode_payload_batch(datas: Sequence[bytes]) -> list[
+        tuple[Optional[np.ndarray], Optional[Pipeline],
+              Optional[WireDecodeError]]]:
+    """Batched :func:`decode_payload` with **per-item degradation**.
+
+    Returns one ``(vector, pipeline, error)`` triple per payload, in
+    input order; exactly one of ``vector`` / ``error`` is None.  Payloads
+    are grouped by (spec, body dtype, body length); each uniform group of
+    a fully :attr:`Pipeline.batchable` pipeline decodes in one vectorized
+    stage walk, bit-identical to the per-item path.  Anything else — a
+    singleton, a non-batchable spec, or a group whose vectorized walk
+    reports a malformation — degrades to per-item decode, so one corrupt
+    payload zeroes out *that* client only and never poisons the batch.
+    """
+    results: list = [None] * len(datas)
+    groups: dict[tuple, list] = {}
+    # Fast header scan: payloads from one sender fleet share the entire
+    # magic..spec..dtype..n_stages prefix, so after fully validating the
+    # first header a byte-compare against that prefix lets the rest skip
+    # straight to the per-stage params walk.  Any mismatch (or truncation
+    # mid-walk) falls through to the full unpack for a proper error.
+    fp_bytes = b""
+    fp_len = fp_n_st = fp_dtype = fp_version = 0
+    fp_spec, fp_pipeline = "", None
+    for i, data in enumerate(datas):
+        if fp_pipeline is not None and data[:fp_len] == fp_bytes:
+            off, params, ok = fp_len, [], True
+            for _ in range(fp_n_st):
+                if len(data) < off + 4:
+                    ok = False
+                    break
+                plen = _U32.unpack_from(data, off)[0]
+                off += 4
+                if len(data) < off + plen:
+                    ok = False
+                    break
+                params.append(data[off:off + plen])
+                off += plen
+            if ok:
+                header = WireHeader(fp_spec, params, fp_dtype, fp_version)
+                key = (fp_spec, fp_dtype, len(data) - off)
+                groups.setdefault(key, []).append(
+                    (i, header, off, fp_pipeline))
+                continue
+        try:
+            header, off = WireHeader.unpack(data)
+            pipeline = _negotiated_pipeline(header.spec)
+        except WireDecodeError as e:
+            results[i] = (None, None, e)
+            continue
+        if fp_pipeline is None:
+            # utf-8 re-encode reproduces the on-wire spec bytes exactly,
+            # so the prefix length is recoverable from the parsed header.
+            fp_len = 7 + len(header.spec.encode("utf-8"))
+            fp_bytes = bytes(data[:fp_len])
+            fp_n_st = len(header.stage_params)
+            fp_dtype, fp_version = header.dtype_code, header.version
+            fp_spec, fp_pipeline = header.spec, pipeline
+        key = (header.spec, header.dtype_code, len(data) - off)
+        groups.setdefault(key, []).append((i, header, off, pipeline))
+    for members in groups.values():
+        pipeline = members[0][3]
+        if len(members) > 1 and pipeline.batchable:
+            try:
+                mat = pipeline._decode_body_batch(
+                    [m[1] for m in members],
+                    [datas[m[0]] for m in members],
+                    [m[2] for m in members])
+            except WireDecodeError:
+                mat = None    # some item is malformed: isolate it below
+            if mat is not None:
+                for (i, _, _, _), row in zip(members, mat):
+                    results[i] = (row, pipeline, None)
+                continue
+        for i, header, off, pipeline in members:
+            try:
+                vec = pipeline._decode_body(header, datas[i], off, None)
+                results[i] = (vec, pipeline, None)
+            except WireDecodeError as e:
+                results[i] = (None, None, e)
+    return results
 
 
 # --------------------------------------------------------------------------

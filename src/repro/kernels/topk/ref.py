@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the batched top-k gather/scatter kernels.
+
+Mirrors the numpy batch path in ``repro.core.wire.TopKStage``:
+``take_along_axis`` for gather, zero-init + row-wise scatter for decode.
+Duplicate indices are undefined here (``.at[].set`` order) — the wire
+never produces them; the parity tests use unique sorted indices.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_rows(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, P), idx: (N, K) -> (N, K) values at idx per row."""
+    return jnp.take_along_axis(x.astype(jnp.float32),
+                               idx.astype(jnp.int32), axis=1)
+
+
+def scatter_rows(idx: jnp.ndarray, vals: jnp.ndarray, n: int) -> jnp.ndarray:
+    """idx/vals: (N, K) -> (N, n), zeros except vals placed at idx."""
+    n_items, k_kept = idx.shape
+    rows = jnp.repeat(jnp.arange(n_items), k_kept)
+    out = jnp.zeros((n_items, n), jnp.float32)
+    return out.at[rows, idx.astype(jnp.int32).reshape(-1)].set(
+        vals.astype(jnp.float32).reshape(-1))

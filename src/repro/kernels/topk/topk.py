@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: batched top-k gather/scatter over client slabs.
+
+The wire-plane's ``topk`` stage moves values between a dense ``(N, P)``
+client slab and its sparse ``(N, K)`` representation: *gather* on encode
+(pick each row's K kept values at already-selected indices), *scatter* on
+decode (place K values back into a zeroed dense row).  Selection itself
+(argpartition) stays on the host — it is data-dependent and cheap — so the
+kernels are pure data movement: one grid step per client row, a
+``fori_loop`` of dynamically indexed loads/stores inside VMEM.
+
+Scatter writes are sequential within a row, so duplicate indices resolve
+last-wins — the same contract as numpy fancy assignment, which keeps the
+batch decode bit-identical to the per-item path even on malformed
+payloads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(x_ref, idx_ref, out_ref):
+    k_kept = idx_ref.shape[1]
+
+    def body(k, carry):
+        out_ref[0, k] = x_ref[0, idx_ref[0, k]]
+        return carry
+
+    jax.lax.fori_loop(0, k_kept, body, 0)
+
+
+def _scatter_kernel(idx_ref, vals_ref, out_ref):
+    k_kept = idx_ref.shape[1]
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(k, carry):
+        out_ref[0, idx_ref[0, k]] = vals_ref[0, k]
+        return carry
+
+    jax.lax.fori_loop(0, k_kept, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_gather_pallas(x: jax.Array, idx: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """x: (N, P) f32, idx: (N, K) int32 -> (N, K) f32 values at idx."""
+    n_items, _ = x.shape
+    k_kept = idx.shape[1]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(n_items,),
+        in_specs=[
+            pl.BlockSpec((1, x.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_kept), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k_kept), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_items, k_kept), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), idx.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def topk_scatter_pallas(idx: jax.Array, vals: jax.Array, *, n: int,
+                        interpret: bool = True) -> jax.Array:
+    """idx/vals: (N, K) -> (N, n) f32, zeros except vals placed at idx."""
+    n_items, k_kept = idx.shape
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(n_items,),
+        in_specs=[
+            pl.BlockSpec((1, k_kept), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_kept), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_items, n), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), vals.astype(jnp.float32))

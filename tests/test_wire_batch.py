@@ -1,0 +1,362 @@
+"""Batched wire-plane tests: batch==loop parity, per-item degradation,
+and the server's broadcast-encode cache.
+
+The acceptance bar for the batch plane:
+
+* ``Pipeline.encode_batch`` is **byte-identical** to the per-item encode
+  loop and ``decode_batch`` / ``decode_payload_batch`` are bit-identical
+  to per-item decode, for every registered stage, across batch sizes —
+  including the per-client EF/delta state evolution across messages;
+* one malformed payload in a batch zero-fills *that* client's row and
+  bumps ``decode_errors`` exactly once — it never poisons the batch;
+* the broadcast-encode cache serves bytes identical to per-client
+  encoding, is refused for stateful downlinks, and is invalidated on
+  every model update (a stale model is never served);
+* a fleet round under ``batch_wire=True`` (the default) is bit-identical
+  to ``batch_wire=False`` — the orchestrator-equivalence digests pin the
+  end-to-end version of this.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.rounds import (FederatedSystem, FLClient, FLConfig,
+                               TransportConfig)
+from repro.core.simulator import Simulator
+from repro.core.wire import (WireDecodeError, WireHeader, available_stages,
+                             batch_backend, decode_payload_batch,
+                             parse_pipeline)
+
+RNG = np.random.default_rng(11)
+SERVER = "10.8.0.1"
+
+
+def vecs(n_items: int, n: int) -> list[np.ndarray]:
+    return [RNG.standard_normal(n).astype(np.float32)
+            for _ in range(n_items)]
+
+
+# Specs chosen so every registered built-in stage appears at least once,
+# alone where legal and composed where interesting (EF wrapping lossy
+# tails, delta+EF together, hex terminal after lossy stages).
+BATCH_SPECS = [
+    "raw",
+    "hex",
+    "int8(256)",
+    "int8(1024)",
+    "topk(0.05)",
+    "delta|raw",
+    "delta|ef|int8(128)",
+    "topk(0.1)|int8(64)",
+    "delta|ef|topk(0.03)|int8(1024)",
+    "int8(128)|hex",
+    "ef|int8(64)",
+    "delta|ef|topk(0.1)|hex",
+]
+
+
+def test_batch_specs_cover_every_registered_stage():
+    covered = set()
+    for spec in BATCH_SPECS:
+        for tok in spec.split("|"):
+            covered.add(tok.partition("(")[0])
+    assert covered == set(available_stages())
+
+
+def _assert_states_equal(states_a, states_b, spec):
+    for sa, sb in zip(states_a, states_b):
+        for slot_a, slot_b in zip(sa.slots, sb.slots):
+            assert set(slot_a) == set(slot_b), spec
+            for key in slot_a:
+                np.testing.assert_array_equal(
+                    np.asarray(slot_a[key]), np.asarray(slot_b[key]),
+                    err_msg=f"{spec}: slot {key!r} diverged")
+
+
+def _run_parity(spec: str, n_items: int, n_params: int,
+                n_messages: int = 2, seed: int = 0):
+    """Drive the same message sequence through the per-item loop and the
+    batch walk; assert bytes, decoded matrices, and per-client pipeline
+    state all match exactly."""
+    rng = np.random.default_rng(seed)
+    pipeline = parse_pipeline(spec)
+    states_loop = [pipeline.new_state() for _ in range(n_items)]
+    states_batch = [pipeline.new_state() for _ in range(n_items)]
+    if pipeline.caps.delta_domain:
+        model = rng.standard_normal(n_params).astype(np.float32)
+        for st in states_loop + states_batch:
+            pipeline.set_reference(st, model)
+    for _ in range(n_messages):
+        batch_in = [rng.standard_normal(n_params).astype(np.float32)
+                    for _ in range(n_items)]
+        loop_bytes = [pipeline.encode(v, s)
+                      for v, s in zip(batch_in, states_loop)]
+        batch_bytes = pipeline.encode_batch(batch_in, states_batch)
+        assert batch_bytes == loop_bytes, f"{spec}: encode bytes diverged"
+        _assert_states_equal(states_loop, states_batch, spec)
+
+        loop_dec = [pipeline.decode(d) for d in loop_bytes]
+        batch_dec = pipeline.decode_batch(batch_bytes)
+        assert batch_dec.dtype == np.float32
+        assert batch_dec.shape == (n_items, loop_dec[0].size)
+        np.testing.assert_array_equal(
+            batch_dec, np.stack(loop_dec),
+            err_msg=f"{spec}: decode diverged from per-item loop")
+
+        for (mat_vec, _, err), ref in zip(
+                decode_payload_batch(batch_bytes), loop_dec):
+            assert err is None, f"{spec}: {err}"
+            np.testing.assert_array_equal(mat_vec, ref)
+
+
+class TestBatchLoopParity:
+    """The tentpole contract: batch paths are byte/bit-identical twins."""
+
+    def test_numpy_backend_is_default(self):
+        assert batch_backend() == "numpy"
+
+    @pytest.mark.parametrize("n_items", [1, 7, 64])
+    @pytest.mark.parametrize("spec", BATCH_SPECS)
+    def test_batch_matches_loop(self, spec, n_items):
+        _run_parity(spec, n_items, n_params=777, seed=hash(spec) % 2**32)
+
+    @pytest.mark.parametrize("n_params", [0, 1, 5, 1023, 1025])
+    def test_awkward_vector_lengths(self, n_params):
+        for spec in ("int8(1024)", "topk(0.05)", "hex",
+                     "delta|ef|topk(0.1)|int8(256)"):
+            _run_parity(spec, 3, n_params, seed=n_params + 1)
+
+    def test_ragged_batch_falls_back_to_loop(self):
+        pipeline = parse_pipeline("int8(64)")
+        ragged = [vecs(1, 100)[0], vecs(1, 200)[0]]
+        out = pipeline.encode_batch(ragged)
+        assert out == [pipeline.encode(v) for v in ragged]
+
+    def test_empty_batch(self):
+        pipeline = parse_pipeline("raw")
+        assert pipeline.encode_batch([]) == []
+        assert pipeline.decode_batch([]).shape == (0, 0)
+
+    def test_legacy_pipeline_not_batchable_but_still_works(self):
+        from repro.core.wire import legacy_pipeline
+        pipeline = legacy_pipeline("int8")
+        assert not pipeline.batchable
+        batch = vecs(3, 500)
+        out = pipeline.encode_batch(batch)
+        assert out == [pipeline.encode(v) for v in batch]
+        np.testing.assert_array_equal(
+            pipeline.decode_batch(out),
+            np.stack([pipeline.decode(d) for d in out]))
+
+    def test_decode_batch_rejects_foreign_spec(self):
+        ours = parse_pipeline("raw")
+        theirs = parse_pipeline("hex")
+        data = theirs.encode(vecs(1, 32)[0])
+        with pytest.raises(WireDecodeError, match="names pipeline"):
+            ours.decode_batch([data, data])
+
+
+# --------------------------------------------------------------------------
+# Property test: random well-formed specs, random shapes (hypothesis-gated
+# per-test — the rest of this module must run without it)
+# --------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @st.composite
+    def _wire_specs(draw):
+        """Random *coherent* specs: delta first, ef next, optional topk,
+        then a terminal — the same ordering TransportConfig accepts."""
+        prefix = draw(st.sampled_from(["", "delta|", "ef|", "delta|ef|"]))
+        mid = draw(st.sampled_from(["", "topk(0.25)|", "topk(0.02)|"]))
+        terminal = draw(st.sampled_from(
+            ["raw", "hex", "int8(64)", "int8(1024)"]))
+        return prefix + mid + terminal
+
+    @given(spec=_wire_specs(),
+           n_items=st.integers(min_value=1, max_value=9),
+           n_params=st.integers(min_value=0, max_value=600),
+           seed=st.integers(min_value=0, max_value=2**31))
+    @settings(max_examples=40, deadline=None)
+    def test_batch_parity_property(spec, n_items, n_params, seed):
+        _run_parity(spec, n_items, n_params, seed=seed)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_batch_parity_property():
+        pytest.importorskip("hypothesis")
+
+
+# --------------------------------------------------------------------------
+# Server integration: per-item degradation + broadcast cache
+# --------------------------------------------------------------------------
+def _star(n_clients: int, cfg: FLConfig, n_params: int = 300):
+    from repro.core.channel import Link, NoLoss
+    sim = Simulator()
+    clients = []
+    for i in range(n_clients):
+        addr = f"10.8.0.{10 + i}"
+        sim.connect(addr, SERVER,
+                    Link(1e8, 1_000_000, NoLoss()),
+                    Link(1e8, 1_000_000, NoLoss()))
+
+        def fn(params, round_idx, client, _v=0.25 * (i + 1)):
+            return ({k: np.full_like(v, _v) for k, v in params.items()}, {})
+        clients.append(FLClient(addr, fn, train_time_ns=1_000_000 * (i + 1),
+                                cadence_ns=5_000_000))
+    params = {"w": np.linspace(-1, 1, n_params, dtype=np.float32)}
+    return sim, FederatedSystem(sim, SERVER, clients, params, cfg)
+
+
+class TestBatchDecodeDegradation:
+    def _payloads(self, core, n_items):
+        pipeline = core.uplink_pipeline
+        updates = vecs(n_items, core.n_params)
+        return updates, [pipeline.encode(v) for v in updates]
+
+    def test_corrupt_payload_degrades_only_its_row(self):
+        """Regression (satellite 1): a corrupt payload inside a batch
+        zero-fills its own row, bumps decode_errors once, and leaves
+        every other row bit-identical to per-item decode."""
+        _, system = _star(1, FLConfig(
+            transport=TransportConfig(uplink="topk(0.1)|int8(64)")))
+        core = system.core
+        updates, datas = self._payloads(core, 5)
+        # Inject a bad WireHeader: same spec, same body (so the payload
+        # lands in the batch group), but garbage stage params — the
+        # vectorized walk must reject it and the fallback isolate it.
+        victim = datas[2]
+        _, off = WireHeader.unpack(victim)
+        bad = WireHeader(core.uplink_pipeline.spec,
+                         [b"\x13\x37", b"\x00"], dtype_code=0).pack()
+        datas[2] = bad + victim[off:]
+        before = core.decode_errors
+        mat = core.decode_vec_batch(datas)
+        assert core.decode_errors == before + 1
+        assert not mat[2].any()
+        for i in (0, 1, 3, 4):
+            np.testing.assert_array_equal(mat[i], core.decode_vec(datas[i]))
+
+    def test_unparseable_garbage_degrades_only_its_row(self):
+        _, system = _star(1, FLConfig(
+            transport=TransportConfig(uplink="int8(128)")))
+        core = system.core
+        _, datas = self._payloads(core, 4)
+        datas[1] = b"\x00\x01 not a wire payload at all"
+        before = core.decode_errors
+        mat = core.decode_vec_batch(datas)
+        assert core.decode_errors == before + 1
+        assert not mat[1].any()
+        assert all(mat[i].any() for i in (0, 2, 3))
+
+    def test_delta_domain_mismatch_degrades_per_row(self):
+        """A rogue delta-domain header inside a batch is refused (policy,
+        not parse) without touching its neighbours."""
+        _, system = _star(1, FLConfig(
+            transport=TransportConfig(uplink="int8(128)")))
+        core = system.core
+        _, datas = self._payloads(core, 3)
+        rogue = parse_pipeline("delta|int8(128)")
+        datas[0] = rogue.encode(vecs(1, core.n_params)[0],
+                                rogue.new_state())
+        before = core.decode_errors
+        mat = core.decode_vec_batch(datas)
+        assert core.decode_errors == before + 1
+        assert not mat[0].any() and mat[1].any() and mat[2].any()
+
+
+class TestBroadcastCache:
+    def test_cache_hit_counting_and_reuse(self):
+        _, system = _star(2, FLConfig(
+            transport=TransportConfig(downlink="int8(1024)")))
+        core = system.core
+        first = core.broadcast_payload()
+        assert first is not None and core.bcast_cache_hits == 0
+        second = core.broadcast_payload()
+        assert second is first                 # same object: no re-encode
+        assert core.bcast_cache_hits == 1
+
+    def test_cache_bytes_identical_to_per_client_encode(self):
+        _, system = _star(2, FLConfig(
+            transport=TransportConfig(downlink="topk(0.5)|hex")))
+        core = system.core
+        assert core.broadcast_payload() == core.packetizer.encode_bytes(
+            core.global_params)
+
+    def test_stale_cache_never_served_after_model_update(self):
+        """Satellite 2: every global_params assignment drops the cache."""
+        _, system = _star(1, FLConfig(
+            transport=TransportConfig(downlink="int8(1024)")))
+        core = system.core
+        stale = core.broadcast_payload()
+        new_params = {"w": np.linspace(3, 4, core.n_params,
+                                       dtype=np.float32)}
+        core.global_params = new_params
+        fresh = core.broadcast_payload()
+        assert fresh != stale
+        assert fresh == core.packetizer.encode_bytes(new_params)
+
+    def test_cache_refused_for_stateful_downlink(self):
+        _, system = _star(1, FLConfig(
+            transport=TransportConfig(downlink="ef|int8(64)")))
+        core = system.core
+        assert core.downlink_pipeline.caps.stateful
+        assert core.broadcast_payload() is None
+
+    def test_cache_refused_when_batch_wire_off(self):
+        _, system = _star(1, FLConfig(
+            batch_wire=False,
+            transport=TransportConfig(downlink="int8(1024)")))
+        assert system.core.broadcast_payload() is None
+
+    def test_aggregation_invalidates_cache(self):
+        cfg = FLConfig(transport=TransportConfig(
+            uplink="topk(0.2)|int8(256)", downlink="int8(1024)"))
+        _, system = _star(3, cfg)
+        core = system.core
+        stale = core.broadcast_payload()
+        system.run_round()
+        assert core.broadcast_payload() != stale
+
+
+class TestBatchWireEquivalence:
+    """End-to-end: batch_wire=True (default) is bit-identical to the
+    eager per-delivery path, for sync and async, wire and legacy."""
+
+    @pytest.mark.parametrize("mode,transport", [
+        ("sync", TransportConfig(uplink="delta|ef|topk(0.1)|int8(256)",
+                                 downlink="int8(1024)")),
+        ("sync", TransportConfig(codec="int8")),
+        ("async", TransportConfig(uplink="topk(0.2)|int8(128)",
+                                  downlink="hex")),
+    ])
+    def test_rounds_bit_identical(self, mode, transport):
+        import dataclasses
+        kw = dict(mode=mode, transport=transport)
+        if mode == "async":
+            kw.update(buffer_k=2, max_staleness=4)
+        base = FLConfig(**kw)
+        results = {}
+        for batch in (True, False):
+            _, system = _star(4, dataclasses.replace(base,
+                                                     batch_wire=batch))
+            system.run_rounds(3)   # async mode: 3 buffered aggregations
+            results[batch] = system.core.global_params
+        for key in results[True]:
+            np.testing.assert_array_equal(results[True][key],
+                                          results[False][key])
+
+    def test_pending_updates_resolve_in_one_batch(self):
+        """Under batch_wire the scheduler holds opaque pending tokens;
+        decode_errors stays correct because resolution happens before the
+        zero-weight filter in apply_aggregation."""
+        cfg = FLConfig(transport=TransportConfig(uplink="int8(256)"))
+        _, system = _star(3, cfg)
+        system.run_round()
+        assert system.core.decode_errors == 0
+        assert system.core.bcast_cache_hits >= 1   # 3 clients, 1 encode
