@@ -1,0 +1,223 @@
+"""Benchmark — adaptive transport control vs every static wire/FEC config:
+simulated time-to-target-loss on the mixed fiber/lte/congested-edge cohort.
+
+Same seeded fleet, same links, same :class:`ConsensusObjective`; the only
+variable is ``FleetConfig.control``.  The static arms pin each tier of the
+adaptive policy's ladder (``repro.core.control.DEFAULT_TIERS``) fleet-wide
+— light compression + no FEC, the medium middle, heavy compression + dense
+parity — while the adaptive arm starts every client on the middle rung and
+lets the loss-rate EWMA walk it: fiber clients relax to the light tier
+(more signal per round, zero parity overhead), congested-edge clients
+escalate to the heavy tier (updates that actually survive and arrive
+before the deadline).  No single static configuration fits a mixed cohort,
+which is exactly the claim ``--check`` gates CI on:
+
+    adaptive time-to-target < every static arm's time-to-target
+
+``--check`` also re-runs the full orchestrator-equivalence digest matrix
+with ``control="static"`` explicitly set, proving the control plane is a
+pure add-on: all pinned digests must stay byte-identical.
+
+  PYTHONPATH=src python benchmarks/adaptive_bench.py
+  PYTHONPATH=src python benchmarks/adaptive_bench.py --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import (FLConfig, FleetConfig, TransportConfig,
+                        build_fleet_training)
+from repro.core.control import DEFAULT_TIERS
+
+NS = 1_000_000_000
+
+#: The static arms: each ladder tier, pinned fleet-wide.
+STATIC_ARMS = {f"static/tier{i}": t for i, t in enumerate(DEFAULT_TIERS)}
+
+
+def _fl_cfg(*, uplink: str, fec_block: int, fec_parity: int,
+            deadline_ns: int) -> FLConfig:
+    return FLConfig(
+        aggregation="fedavg",
+        transport=TransportConfig(
+            kind="mudp+fec", uplink=uplink, downlink="int8(1024)",
+            fec_block=fec_block, fec_parity=fec_parity,
+            timeout_ns=2 * NS, udp_deadline_ns=3 * NS))
+
+
+def time_to_target(arm: str, *, n_clients: int, seed: int, target_frac: float,
+                   n_params: int, max_rounds: int, deadline_ns: int,
+                   engine: str) -> dict:
+    """Run one arm until the loss target is crossed (or max_rounds)."""
+    if arm == "adaptive":
+        control, tier = "adaptive", DEFAULT_TIERS[1]   # the starting rung
+    else:
+        control, tier = "static", STATIC_ARMS[arm]
+    fleet = FleetConfig(n_clients=n_clients, seed=seed, engine=engine,
+                        model="consensus",
+                        model_args={"n_params": n_params},
+                        round_deadline_ns=deadline_ns, control=control)
+    build = build_fleet_training(
+        fleet, _fl_cfg(uplink=tier["uplink"], fec_block=tier["fec_block"],
+                       fec_parity=tier["fec_parity"],
+                       deadline_ns=deadline_ns))
+    sim, system, model = build.sim, build.system, build.model
+    loss0 = model.loss(system.global_params)
+    target = target_frac * loss0
+    trace: list[dict] = []
+
+    def on_round(res, params):
+        trace.append({"round": res.round_idx, "sim_ns": sim.now_ns,
+                      "loss": model.loss(params),
+                      "arrived": len(res.arrived),
+                      "decode_errors": res.decode_errors})
+    system.on_round_end = on_round
+    t0 = time.perf_counter()
+    system.run_rounds(max_rounds)
+    wall_s = time.perf_counter() - t0
+
+    crossed = next((row for row in trace if row["loss"] <= target), None)
+    core = system.core
+    reneg_by_cohort: dict[str, int] = {}
+    for p in build.profiles:
+        reneg_by_cohort[p.cohort] = (reneg_by_cohort.get(p.cohort, 0)
+                                     + core.renegotiations.get(p.addr, 0))
+    return {
+        "arm": arm,
+        "initial_loss": loss0,
+        "target_loss": target,
+        "rounds_run": len(trace),
+        "rounds_to_target": crossed["round"] + 1 if crossed else None,
+        "sim_ns_to_target": crossed["sim_ns"] if crossed else None,
+        "final_loss": trace[-1]["loss"] if trace else loss0,
+        "renegotiations": sum(core.renegotiations.values()),
+        "renegotiations_by_cohort": dict(sorted(reneg_by_cohort.items())),
+        "decode_errors": sum(r["decode_errors"] for r in trace),
+        "trace": trace,
+        "wall_s": wall_s,
+    }
+
+
+def compare(args) -> dict:
+    kw = dict(n_clients=args.clients, seed=args.seed,
+              target_frac=args.target_frac, n_params=args.params,
+              max_rounds=args.max_rounds,
+              deadline_ns=int(args.deadline_s * NS), engine=args.engine)
+    arms = {name: time_to_target(name, **kw)
+            for name in (*STATIC_ARMS, "adaptive")}
+    adaptive_ns = arms["adaptive"]["sim_ns_to_target"]
+    beats_all = adaptive_ns is not None and all(
+        cell["sim_ns_to_target"] is None
+        or adaptive_ns < cell["sim_ns_to_target"]
+        for name, cell in arms.items() if name != "adaptive")
+    return {"meta": vars(args), "arms": arms,
+            "adaptive_beats_every_static": beats_all}
+
+
+def digests_frozen_under_static() -> list[str]:
+    """Re-run the pinned orchestrator-equivalence matrix with
+    ``control="static"`` explicitly set; return the mismatches.  Empty
+    means the control plane provably does not perturb the default path."""
+    import pathlib
+    tests_dir = str(pathlib.Path(__file__).resolve().parent.parent / "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    from test_orchestrator_equivalence import (EXPECTED, PACKET_ENGINES,
+                                               run_digest)
+    mismatches = []
+    for (scenario, kind), want in sorted(EXPECTED.items()):
+        for engine in PACKET_ENGINES:
+            got = run_digest(scenario, kind, engine, control="static")
+            if got != want:
+                mismatches.append(f"{scenario}/{kind}/{engine}: "
+                                  f"{got} != pinned {want}")
+    return mismatches
+
+
+def bench(rounds: int = 1):
+    """benchmarks.run harness entry: one small comparison cell."""
+    ns = argparse.Namespace(clients=24, seed=0, target_frac=0.02,
+                            params=1024, max_rounds=12, deadline_s=20.0,
+                            engine="batched", check=False, out=None)
+    report = compare(ns)
+    rows = []
+    for name, cell in report["arms"].items():
+        rows.append((f"adaptive/{name.replace('/', '_')}_c24",
+                     cell["wall_s"] * 1e6,
+                     f"sim_s_to_target="
+                     f"{(cell['sim_ns_to_target'] or 0) / 1e9:.2f}"
+                     f";rounds={cell['rounds_to_target']}"
+                     f";reneg={cell['renegotiations']}"
+                     f";final_loss={cell['final_loss']:.4f}"))
+    rows.append(("adaptive/beats_every_static", 0.0,
+                 str(report["adaptive_beats_every_static"])))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--target-frac", type=float, default=0.02,
+                    help="target loss as a fraction of the initial loss")
+    ap.add_argument("--params", type=int, default=2048)
+    ap.add_argument("--max-rounds", type=int, default=16)
+    ap.add_argument("--deadline-s", type=float, default=20.0,
+                    help="sync round deadline (straggler cutoff)")
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "per_packet"])
+    ap.add_argument("--out", default=None, help="optional JSON report path")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless adaptive reaches the target "
+                         "in strictly less simulated time than every "
+                         "static arm AND control='static' leaves every "
+                         "pinned orchestrator digest byte-identical")
+    args = ap.parse_args()
+
+    report = compare(args)
+    for name, cell in report["arms"].items():
+        sim_s = (cell["sim_ns_to_target"] or 0) / 1e9
+        crossed = cell["rounds_to_target"] is not None
+        print(f"{name:>13}: L0={cell['initial_loss']:.3f} -> target "
+              f"{cell['target_loss']:.4f} "
+              + (f"in {cell['rounds_to_target']} rounds, "
+                 f"sim t={sim_s:.2f}s" if crossed else
+                 f"NOT REACHED (final {cell['final_loss']:.4f})")
+              + f", reneg={cell['renegotiations']} "
+              f"{cell['renegotiations_by_cohort']}", flush=True)
+    print("adaptive beats every static arm:"
+          f" {report['adaptive_beats_every_static']}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
+
+    if args.check:
+        ok = True
+        if not report["adaptive_beats_every_static"]:
+            print("CHECK FAILED: a static arm matched or beat adaptive "
+                  "time-to-target", file=sys.stderr)
+            ok = False
+        mismatches = digests_frozen_under_static()
+        if mismatches:
+            print("CHECK FAILED: control='static' perturbed pinned "
+                  "digests:", file=sys.stderr)
+            for m in mismatches:
+                print(f"  {m}", file=sys.stderr)
+            ok = False
+        else:
+            print("digest check passed: control='static' leaves all "
+                  f"pinned digests byte-identical")
+        if not ok:
+            return 1
+        print("check passed: adaptive < every static arm")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

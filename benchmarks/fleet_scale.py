@@ -95,6 +95,8 @@ def run_fleet(transport: str, *, n_clients: int, rounds: int, seed: int,
             "data_packets": r.data_packets,
             "nack_packets": r.nack_packets,
             "parity_packets": r.parity_packets,
+            "decode_errors": r.decode_errors,
+            "bcast_cache_hits": r.bcast_cache_hits,
             "staleness_clamped": r.staleness_clamped,
             "metrics": r.metrics,
             "loss": loss,
@@ -154,6 +156,8 @@ def run_matrix(args, transports: list[str]) -> tuple[dict, dict, dict]:
                   f"sim_s={cell['sim_time_ns'] / 1e9:.2f}"
                   f";bytes={cell['bytes_on_wire']}"
                   f";retx={cell['retransmissions']}"
+                  f";decode_err={sum(r['decode_errors'] for r in cell['rounds'])}"
+                  f";bcast_hits={sum(r['bcast_cache_hits'] for r in cell['rounds'])}"
                   f";arrived={sum(r['arrived'] for r in cell['rounds'])}"
                   f"/{sum(r['roster'] for r in cell['rounds'])}"
                   f";loss={cell['final_loss']:.4f}"

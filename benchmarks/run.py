@@ -11,9 +11,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (aggregation, async_vs_sync, codecs, fl_convergence,
-                        fleet_scale, kernels_bench, roofline, simcore,
-                        topology_bench, transport_comparison,
+from benchmarks import (adaptive_bench, aggregation, async_vs_sync, codecs,
+                        fl_convergence, fleet_scale, kernels_bench, roofline,
+                        simcore, topology_bench, transport_comparison,
                         transport_scenarios, vmap_train, wire_bench)
 
 SUITES = {
@@ -23,6 +23,7 @@ SUITES = {
     "fleet_scale": fleet_scale,
     "topology": topology_bench,
     "async_vs_sync": async_vs_sync,
+    "adaptive": adaptive_bench,
     "fl_convergence": fl_convergence,
     "codecs": codecs,
     "wire": wire_bench,

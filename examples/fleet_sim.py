@@ -28,10 +28,19 @@ and prints test accuracy per round.  ``--train-backend vmap`` batches
 every round's local training into one ``jax.vmap`` call — identical
 rounds, a fraction of the wall time.
 
+``--control adaptive`` turns on the transport control plane
+(``repro.core.control``): the server watches each client's telemetry
+EWMAs and renegotiates its wire pipeline and FEC geometry between
+transactions — fiber clients relax to light compression with no parity,
+congested-edge clients escalate to heavy sparsification and dense parity.
+Each run then prints per-cohort renegotiation counts next to the
+time-to-target-loss.
+
   PYTHONPATH=src python examples/fleet_sim.py
   PYTHONPATH=src python examples/fleet_sim.py --mode async
   PYTHONPATH=src python examples/fleet_sim.py --topology hier --cells 6
   PYTHONPATH=src python examples/fleet_sim.py --model mlp --train-backend vmap
+  PYTHONPATH=src python examples/fleet_sim.py --control adaptive
 """
 
 from __future__ import annotations
@@ -49,15 +58,34 @@ NS = 1_000_000_000
 
 def run(transport: str, mode: str, topology: str = "star", cells: int = 4,
         neighbors: int = 4, model: str = "consensus",
-        train_backend: str = "python") -> None:
+        train_backend: str = "python", control: str = "static") -> None:
+    # The adaptive controller renegotiates pipeline specs in-band, which
+    # needs a self-describing uplink (the PR 5 WireHeader names the
+    # pipeline each payload was encoded with).  Gossip has no server core
+    # to run a controller, so control degrades to static there.
+    adaptive = control == "adaptive" and topology != "gossip"
+    up_spec, down_spec = "delta|ef|topk(0.15)|int8(1024)", "int8(1024)"
+    hops = None
+    wire = {}
+    if adaptive:
+        if topology == "hier":
+            # Hier takes per-hop specs; each tier's ServerCore then runs
+            # its own controller over its own clients' telemetry.
+            hops = (f"client->edge: {up_spec}; edge->client: {down_spec}; "
+                    f"edge->root: {up_spec}; root->edge: {down_spec}")
+        else:
+            wire = {"uplink": up_spec, "downlink": down_spec}
     fleet = FleetConfig(n_clients=N_CLIENTS, seed=7, mode=mode, buffer_k=8,
                         round_deadline_ns=4 * NS, topology=topology,
                         cells=cells, neighbors=neighbors,
-                        model=model, train_backend=train_backend)
+                        model=model, train_backend=train_backend,
+                        hops=hops,
+                        control="adaptive" if adaptive else "static")
     cfg = FLConfig(aggregation="fedavg",
                    transport=TransportConfig(kind=transport,
                                              timeout_ns=2 * NS,
-                                             udp_deadline_ns=3 * NS))
+                                             udp_deadline_ns=3 * NS,
+                                             **wire))
     build = build_fleet_training(fleet, cfg)
     sim, system, profiles = build.sim, build.system, build.profiles
     objective = build.model
@@ -99,6 +127,25 @@ def run(transport: str, mode: str, topology: str = "star", cells: int = 4,
     else:
         print(f"--> {mode}: target loss not reached in {ROUNDS[mode]} "
               f"rounds  [{hops}]")
+    if control != "static":
+        # Every ServerCore runs its own controller: one under star, one
+        # per cell plus the root under hier.  Gossip has no server core,
+        # so the control knob is a documented no-op there.
+        cores = ([system.core] if hasattr(system, "core")
+                 else [system.root.core] + [e.core for e in system.edges]
+                 if hasattr(system, "edges") else [])
+        by_addr: dict = {}
+        for c in cores:
+            for addr, n in c.renegotiations.items():
+                by_addr[addr] = by_addr.get(addr, 0) + n
+        cohort_of = {p.addr: p.cohort for p in profiles}
+        by_cohort: dict = {}
+        for addr, n in by_addr.items():
+            key = cohort_of.get(addr, "edge")
+            by_cohort[key] = by_cohort.get(key, 0) + n
+        print(f"    [{control}] renegotiations by cohort: "
+              f"{dict(sorted(by_cohort.items()))} "
+              f"({sum(by_addr.values())} total)")
 
 
 def main() -> None:
@@ -124,15 +171,23 @@ def main() -> None:
                     help="how local training executes: per-client loop, "
                          "one vmapped batch per round, or vmap sharded "
                          "over the device mesh")
+    ap.add_argument("--control", default="static",
+                    choices=["static", "adaptive"],
+                    help="transport control plane: static never "
+                         "renegotiates; adaptive walks each client along "
+                         "a loss-driven compression/FEC ladder and prints "
+                         "per-cohort renegotiation counts")
     args = ap.parse_args()
     modes = ["sync", "async"] if args.mode == "both" else [args.mode]
     if args.topology == "gossip":
         modes = ["sync"]   # gossip has no server to schedule async rounds
-    for transport in ("mudp", "udp"):
+    transports = (("mudp+fec",) if args.control == "adaptive"
+                  else ("mudp", "udp"))
+    for transport in transports:
         for mode in modes:
             run(transport, mode, topology=args.topology, cells=args.cells,
                 neighbors=args.neighbors, model=args.model,
-                train_backend=args.train_backend)
+                train_backend=args.train_backend, control=args.control)
     print("\nSame seed, same cohorts — transport, scheduling, and wiring "
           "are the only variables. MUDP recovers every update where UDP's "
           "zero-filled gaps keep the loss high; the async server stops "

@@ -24,6 +24,10 @@ from repro.core.channel import (BernoulliLoss, DropList, GilbertElliott, Link,
                                 DCN_LINK, PAPER_LINK, WAN_LINK)
 from repro.core.compression import (Codec, HexCodec, Int8Codec, RawCodec,
                                     TopKCodec, make_codec)
+from repro.core.control import (AdaptivePolicy, ControlDecision,
+                                ControlPolicy, StaticPolicy,
+                                available_policies, make_policy,
+                                register_policy)
 from repro.core.fec import (FecMudpReceiver, FecMudpSender, FecMudpTransport,
                             parity_groups)
 from repro.core.fleet import (COHORT_PRESETS, ClientProfile, CohortSpec,
@@ -43,6 +47,7 @@ from repro.core.scheduling import (SCHEDULERS, AsyncScheduler, SyncScheduler,
 from repro.core.server import ClientPool, ClientSession, ServerCore
 from repro.core.simulator import Node, Simulator
 from repro.core.tcp import TcpReceiver, TcpSender
+from repro.core.telemetry import ClientHealth, Telemetry
 from repro.core.topology import (CellScheduler, EdgeAggregator,
                                  GossipSystem, GossipTopology, HierSystem,
                                  HierTopology, StarTopology, Topology,
@@ -54,14 +59,14 @@ from repro.core.transport import (Delivery, Transport, TransportCaps,
                                   make_transport, register_transport,
                                   validate_transport_kind)
 from repro.core.udp import UdpReceiver, UdpSender, reassemble_partial
-from repro.core.wire import (CodecStage, DeltaStage, ErrorFeedbackStage,
-                             HexStage, Int8Stage, Pipeline, PipelineCaps,
-                             PipelineState, RawStage, Stage, TopKStage,
-                             WireDecodeError, WireError, WireHeader,
-                             available_stages, decode_payload,
-                             legacy_pipeline, parse_hop_specs,
-                             parse_pipeline, parse_stage, register_stage,
-                             stage_for_codec)
+from repro.core.wire import (CodecStage, CrcStage, DeltaStage,
+                             ErrorFeedbackStage, HexStage, Int8Stage,
+                             Pipeline, PipelineCaps, PipelineState, RawStage,
+                             Stage, TopKStage, WireDecodeError, WireError,
+                             WireHeader, available_stages, chunksum32,
+                             decode_payload, legacy_pipeline, migrate_state,
+                             parse_hop_specs, parse_pipeline, parse_stage,
+                             register_stage, stage_for_codec)
 
 __all__ = [
     "fedavg", "fedavg_stack", "pairwise_average", "trimmed_mean",
@@ -73,6 +78,8 @@ __all__ = [
     "NoLoss", "keyed_uniform", "keyed_uniforms", "packet_key_arrays",
     "DCN_LINK", "PAPER_LINK", "WAN_LINK",
     "Codec", "HexCodec", "Int8Codec", "RawCodec", "TopKCodec", "make_codec",
+    "AdaptivePolicy", "ControlDecision", "ControlPolicy", "StaticPolicy",
+    "available_policies", "make_policy", "register_policy",
     "FecMudpReceiver", "FecMudpSender", "FecMudpTransport", "parity_groups",
     "COHORT_PRESETS", "ClientProfile", "CohortSpec", "ConsensusObjective",
     "FleetBuild", "FleetConfig", "build_fleet", "build_fleet_training",
@@ -86,6 +93,7 @@ __all__ = [
     "ClientPool", "ClientSession", "ServerCore",
     "Node", "Simulator",
     "TcpReceiver", "TcpSender",
+    "ClientHealth", "Telemetry",
     "CellScheduler", "EdgeAggregator", "GossipSystem", "GossipTopology",
     "HierSystem", "HierTopology", "StarTopology", "Topology",
     "available_topologies", "make_topology", "neighbor_graph",
@@ -94,10 +102,10 @@ __all__ = [
     "available_transports", "make_transport", "register_transport",
     "validate_transport_kind",
     "UdpReceiver", "UdpSender", "reassemble_partial",
-    "CodecStage", "DeltaStage", "ErrorFeedbackStage", "HexStage",
+    "CodecStage", "CrcStage", "DeltaStage", "ErrorFeedbackStage", "HexStage",
     "Int8Stage", "Pipeline", "PipelineCaps", "PipelineState", "RawStage",
     "Stage", "TopKStage", "WireDecodeError", "WireError", "WireHeader",
-    "available_stages", "decode_payload", "legacy_pipeline",
-    "parse_hop_specs", "parse_pipeline", "parse_stage", "register_stage",
-    "stage_for_codec",
+    "available_stages", "chunksum32", "decode_payload", "legacy_pipeline",
+    "migrate_state", "parse_hop_specs", "parse_pipeline", "parse_stage",
+    "register_stage", "stage_for_codec",
 ]

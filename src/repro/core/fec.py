@@ -101,10 +101,15 @@ class FecMudpSender(MudpSender):
                  fec_block: int = 8, fec_parity: int = 1, **kwargs):
         super().__init__(sim, node, dest, packets, **kwargs)
         self.fec_block = max(1, fec_block)
-        self.fec_parity = max(1, fec_parity)
+        # parity 0 is a valid runtime setting (the adaptive control plane
+        # drops the FEC trailer entirely for clean links): the sender
+        # degenerates to plain MUDP for this transaction.
+        self.fec_parity = max(0, fec_parity)
 
     def start(self) -> None:
         super().start()   # data burst + timer; no sim time elapses in between
+        if self.fec_parity == 0:
+            return        # no trailer: plain MUDP recovery only
         groups = parity_groups(self.total, self.fec_block, self.fec_parity)
         trailer = [
             make_parity_packet(i + 1, len(groups), group, self.packets,
@@ -134,7 +139,8 @@ class FecMudpReceiver(MudpReceiver):
                  **kwargs):
         super().__init__(sim, node, **kwargs)
         self.fec_block = max(1, fec_block)
-        self.fec_parity = max(1, fec_parity)
+        # parity 0: never expect a trailer, never defer gap reports.
+        self.fec_parity = max(0, fec_parity)
         self.stats_repairs = 0
         # key -> {parity_seq: (covered, lens, xor, width)}
         self._parity: dict[tuple[str, int],
@@ -297,8 +303,14 @@ def _fec_flow_model(ctx):
     """
     from repro.core.flow import (FlowOutcome, PH_LAST, PH_LOSS, PH_REORD,
                                  reorder_prob, spurious_reorder_nacks)
-    from repro.core.mudp import flow_ack_outcome, flow_recover, spurious_volley
+    from repro.core.mudp import (_mudp_flow_model, flow_ack_outcome,
+                                 flow_recover, spurious_volley)
     cfg = ctx.cfg
+    if cfg.fec_parity <= 0:
+        # No trailer on the wire: the transaction is distributionally plain
+        # MUDP (parity_groups is empty, so the packet engines send nothing
+        # extra either).  Delegate so the flow engine stays equivalent.
+        return _mudp_flow_model(ctx)
     n = ctx.total
     p = ctx.p
     st = ctx.stats

@@ -210,6 +210,14 @@ class FleetConfig:
     # "vmap" = one jitted jax.vmap call per pending batch; "shard" = vmap
     # sharded over the local device mesh (falls back to vmap on 1 device).
     train_backend: str = "python"
+    # Adaptive transport control plane (repro.core.control): the policy
+    # consulted between transactions to renegotiate each client's wire
+    # pipeline and FEC geometry from its telemetry.  "static" (default)
+    # never renegotiates and is digest-pinned; "adaptive" walks the
+    # loss-driven tier ladder.  Forwarded onto FLConfig by the topologies
+    # (star and hier; gossip has no server core, so it ignores these).
+    control: str = "static"
+    control_args: Optional[dict] = None
 
     def __post_init__(self) -> None:
         # Topology parameters fail at construction, not deep inside
@@ -267,6 +275,14 @@ class FleetConfig:
         if self.model_args is not None and self.model is None:
             raise ValueError("model_args= without model=: name the model "
                              "the arguments configure")
+        from repro.core.control import available_policies
+        if self.control not in available_policies():
+            raise ValueError(f"unknown control policy {self.control!r}; "
+                             f"one of {available_policies()}")
+        if self.control_args is not None and self.control == "static":
+            raise ValueError("control_args= with control='static': the "
+                             "static policy takes no arguments; name the "
+                             "policy they configure")
 
     def cohort_specs(self) -> dict[str, CohortSpec]:
         return self.cohorts if self.cohorts is not None else COHORT_PRESETS

@@ -297,7 +297,14 @@ class FlowSender:
     """One transaction under the flow engine: runs the transport's analytic
     model at ``start()`` and schedules the (few) resulting events.  Exposes
     the same ``start()`` / ``stats`` / callback surface as the packet-level
-    senders, so schedulers and topologies cannot tell the difference."""
+    senders, so schedulers and topologies cannot tell the difference.
+
+    ``cfg`` is captured per *transaction*, not per transport: the server
+    passes each client's current effective TransportConfig
+    (``ServerCore.transport_cfg_for``), so when the adaptive control plane
+    renegotiates FEC geometry mid-run the analytic models see the new
+    parameters on the very next transaction — same cadence as the packet
+    engines, whose sender factories take the identical argument."""
 
     def __init__(self, model: Callable, sim: Simulator, src: Node,
                  dst: Node, packets: list, cfg, *,

@@ -83,6 +83,8 @@ class SyncScheduler:
         self._late_folded = 0
         self._staleness_clamped = 0
         self._retx0 = 0
+        self._decode0 = core.decode_errors
+        self._bcast0 = core.bcast_cache_hits
         self._round_start_ns = 0
         self._stats0 = core.snapshot_stats()
 
@@ -112,8 +114,17 @@ class SyncScheduler:
         self._late_folded = 0
         self._staleness_clamped = 0
         self._retx0 = core.retx_total
+        self._decode0 = core.decode_errors
+        self._bcast0 = core.bcast_cache_hits
         self._round_start_ns = core.sim.now_ns
         self._stats0 = core.snapshot_stats()
+
+        if core.controller is not None:
+            # Control step: between transactions is exactly here — last
+            # round's telemetry is final, this round's sessions are not yet
+            # open, so a renegotiated spec governs the whole round.
+            for client in roster:
+                core.apply_control(client.addr)
 
         if self.cfg.round_deadline_ns is not None:
             self._deadline_timer = core.sim.schedule(
@@ -141,6 +152,9 @@ class SyncScheduler:
             retransmissions=core.retx_total - self._retx0,
             roster=sorted(self._roster),
             staleness_clamped=self._staleness_clamped,
+            decode_errors=core.decode_errors - self._decode0,
+            bcast_cache_hits=core.bcast_cache_hits - self._bcast0,
+            client_health=core.telemetry.snapshot_all(),
             **core.stats_delta(self._stats0),
         )
 
@@ -264,6 +278,8 @@ class AsyncScheduler:
         self._timeouts_window = 0
         self._stats0 = core.snapshot_stats()
         self._retx0 = core.retx_total
+        self._decode0 = core.decode_errors
+        self._bcast0 = core.bcast_cache_hits
         self._window_start_ns = core.sim.now_ns
 
     # -- drivers --------------------------------------------------------------
@@ -285,6 +301,8 @@ class AsyncScheduler:
         self._stopped = False
         self._stats0 = core.snapshot_stats()
         self._retx0 = core.retx_total
+        self._decode0 = core.decode_errors
+        self._bcast0 = core.bcast_cache_hits
         self._window_start_ns = core.sim.now_ns
         for client in core.pool.active(self._agg_idx):
             if client.addr not in self._inflight:
@@ -300,6 +318,10 @@ class AsyncScheduler:
         core = self.core
         addr = client.addr
         self._idle.discard(addr)
+        # Control step: a session entry is this client's between-transactions
+        # moment — its previous transactions' telemetry is final and nothing
+        # of its next session is in flight yet.
+        core.apply_control(addr)
         self._client_round[addr] = self._client_round.get(addr, -1) + 1
         txn_down, txn_up = core.new_txn_pair()
         session = core.open_session(client, self._client_round[addr],
@@ -451,6 +473,9 @@ class AsyncScheduler:
             retransmissions=core.retx_total - self._retx0,
             roster=sorted(set(arrived) | set(self._inflight)),
             staleness_clamped=clamped,
+            decode_errors=core.decode_errors - self._decode0,
+            bcast_cache_hits=core.bcast_cache_hits - self._bcast0,
+            client_health=core.telemetry.snapshot_all(),
             metrics={
                 "model_version": self._model_version,
                 "buffer_size": len(self._buffer),
@@ -469,6 +494,8 @@ class AsyncScheduler:
         self._timeouts_window = 0
         self._stats0 = core.snapshot_stats()
         self._retx0 = core.retx_total
+        self._decode0 = core.decode_errors
+        self._bcast0 = core.bcast_cache_hits
         self._window_start_ns = now
         self._agg_idx += 1
         if self._agg_idx >= self._target:

@@ -37,16 +37,18 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from repro.core import aggregation as agg
+from repro.core.control import available_policies, make_policy
 from repro.core.packetizer import (Packetizer, flatten_to_vector, packetize,
                                    unflatten_from_vector)
 from repro.core.flow import maybe_flow
 from repro.core.simulator import Simulator
+from repro.core.telemetry import Telemetry
 from repro.core.transport import (Delivery, Transport, TransportConfig,
                                   make_transport, validate_transport_kind)
 from repro.core.wire import (Pipeline, PipelineState, WireDecodeError,
                              decode_payload as wire_decode_payload,
                              decode_payload_batch as wire_decode_payload_batch,
-                             legacy_pipeline, parse_pipeline)
+                             legacy_pipeline, migrate_state, parse_pipeline)
 
 
 def _scheduler_registry() -> dict:
@@ -112,6 +114,16 @@ class FLConfig:
     # equivalence digests, which run with this default), so False exists
     # only to time the difference and to simplify debugging.
     batch_wire: bool = True
+    # Adaptive transport control plane (repro.core.control): the registered
+    # policy consulted between transactions — sync round starts, async
+    # session entries — to renegotiate each client's uplink/downlink
+    # pipeline spec and FEC geometry from its telemetry.  "static" (the
+    # default) skips the control step entirely and is pinned bit-identical
+    # by the orchestrator-equivalence digests; "adaptive" is the built-in
+    # loss-driven tier ladder.  control_args are the policy factory's
+    # kwargs (e.g. {"hi": 0.05} for adaptive).
+    control: str = "static"
+    control_args: Optional[dict] = None
 
     def __post_init__(self) -> None:
         # Fail at construction time (with the registered names) rather than
@@ -133,6 +145,9 @@ class FLConfig:
                 "'delta' and 'ef' pipeline stages; with transport.uplink "
                 "set, put the stages in the spec instead "
                 "(e.g. uplink='delta|ef|int8(1024)')")
+        if self.control not in available_policies():
+            raise ValueError(f"unknown control policy {self.control!r}; "
+                             f"one of {available_policies()}")
 
 
 @dataclasses.dataclass
@@ -161,6 +176,13 @@ class RoundResult:
     # How many contributions had their staleness factor clamped to
     # FLConfig.staleness_floor (discount**age underflow guard).
     staleness_clamped: int = 0
+    # Wire-plane counters for this window: payloads explicitly degraded to
+    # zero-fill, and downlinks served from the broadcast-encode cache.
+    decode_errors: int = 0
+    bcast_cache_hits: int = 0
+    # Per-client telemetry snapshots ({addr: repro.core.telemetry.
+    # ClientHealth}, sorted by addr) as of this window's end.
+    client_health: dict = dataclasses.field(default_factory=dict)
 
 
 # --------------------------------------------------------------------------
@@ -292,11 +314,14 @@ class _PendingWire:
     cannot move any event time or order.
     """
 
-    __slots__ = ("data", "vec")
+    __slots__ = ("data", "vec", "addr")
 
-    def __init__(self, data: bytes):
+    def __init__(self, data: bytes, addr: Optional[str] = None):
         self.data: Optional[bytes] = data
         self.vec: Optional[np.ndarray] = None
+        # Sender address, kept so a deferred decode failure can still be
+        # attributed to the right client's telemetry.
+        self.addr = addr
 
     def __repr__(self) -> str:
         state = "decoded" if self.vec is not None else \
@@ -354,6 +379,29 @@ class ServerCore:
         # Broadcast-encode cache accounting: how many downlinks reused the
         # per-model-version encoded bytes instead of re-encoding.
         self.bcast_cache_hits = 0
+
+        # Adaptive control plane.  The telemetry plane is always on (pure
+        # bookkeeping: no RNG, no events, no sim.stats — it cannot move a
+        # digest); the controller is None under the default "static"
+        # policy, which skips the whole control step.  Renegotiated
+        # clients get per-addr overrides here; everyone else falls through
+        # to the base pipelines/packetizer/config, so the default path is
+        # bit-identical with or without this machinery.
+        self.telemetry = Telemetry()
+        self.controller = (None if cfg.control == "static"
+                           else make_policy(cfg.control,
+                                            **(cfg.control_args or {})))
+        self.renegotiations: dict[str, int] = {}
+        self._uplink_over: dict[str, Pipeline] = {}
+        self._down_over: dict[str, tuple[Pipeline, Packetizer]] = {}
+        self._cfg_over: dict[str, TransportConfig] = {}
+        if (self.controller is not None
+                and not self.uplink_pipeline.self_describing):
+            raise ValueError(
+                "adaptive control renegotiates the uplink in-band via the "
+                "self-describing WireHeader; set transport.uplink to a "
+                "pipeline spec (legacy codec mode cannot renegotiate)")
+
         self.history: list[RoundResult] = []
         self.on_round_end: Optional[Callable[[RoundResult, Any], None]] = None
 
@@ -427,6 +475,24 @@ class ServerCore:
             self._n_params = int(flatten_to_vector(self._global_params).size)
         return self._n_params
 
+    # -- per-client effective wire plane --------------------------------------
+    # Renegotiated clients (repro.core.control) override the base pipeline
+    # per address; everyone else falls through to the base objects, so the
+    # static path allocates nothing and behaves bit-identically.
+    def uplink_pipeline_for(self, addr: str) -> Pipeline:
+        return self._uplink_over.get(addr, self.uplink_pipeline)
+
+    def downlink_pipeline_for(self, addr: str) -> Pipeline:
+        over = self._down_over.get(addr)
+        return over[0] if over is not None else self.downlink_pipeline
+
+    def packetizer_for(self, addr: str) -> Packetizer:
+        over = self._down_over.get(addr)
+        return over[1] if over is not None else self.packetizer
+
+    def transport_cfg_for(self, addr: str) -> TransportConfig:
+        return self._cfg_over.get(addr, self.cfg.transport)
+
     # -- per-client wire state -------------------------------------------------
     def wire_state(self, addr: str, *, direction: str) -> \
             Optional[PipelineState]:
@@ -436,8 +502,9 @@ class ServerCore:
         stateless (nothing to persist).  Decode is stateless for every
         built-in stage."""
         pipeline, table = {
-            "uplink": (self.uplink_pipeline, self._up_enc_state),
-            "downlink": (self.downlink_pipeline, self._down_enc_state),
+            "uplink": (self.uplink_pipeline_for(addr), self._up_enc_state),
+            "downlink": (self.downlink_pipeline_for(addr),
+                         self._down_enc_state),
         }[direction]
         if not pipeline.caps.stateful:
             return None
@@ -445,6 +512,84 @@ class ServerCore:
         if state is None:
             state = table[addr] = pipeline.new_state()
         return state
+
+    # -- adaptive control ------------------------------------------------------
+    def apply_control(self, addr: str) -> bool:
+        """Consult the bound control policy for one client (schedulers call
+        this between transactions: sync at round start, async at session
+        entry).  Returns True when something actually changed."""
+        if self.controller is None:
+            return False
+        decision = self.controller.renegotiate(
+            addr, self.telemetry.snapshot(addr),
+            self.transport_cfg_for(addr))
+        if decision is None:
+            return False
+        return self._apply_decision(addr, decision)
+
+    def _apply_decision(self, addr: str, decision) -> bool:
+        """Install one :class:`repro.core.control.ControlDecision`.
+
+        No-op decisions (every field already at its target) are filtered
+        here, so policies may return their target config unconditionally
+        and only real changes count as renegotiations.  The new config
+        revalidates through ``dataclasses.replace`` (spec parse + dry-run
+        probe), pipeline swaps migrate encoder state under the
+        :func:`repro.core.wire.migrate_state` rules (or reset it when the
+        decision says so), and the aggregation domain is frozen: a policy
+        that flips delta-ness would silently corrupt aggregation, so it is
+        refused loudly.
+        """
+        cur = self.transport_cfg_for(addr)
+        changes = {f: v for f in ("uplink", "downlink",
+                                  "fec_block", "fec_parity")
+                   if (v := getattr(decision, f)) is not None
+                   and v != getattr(cur, f)}
+        if not changes:
+            return False
+        new_cfg = dataclasses.replace(cur, **changes)
+        if "uplink" in changes:
+            new_pipe = parse_pipeline(new_cfg.uplink)
+            if (new_pipe.caps.delta_domain
+                    != self.uplink_pipeline.caps.delta_domain):
+                raise ValueError(
+                    f"control policy renegotiated {addr} to "
+                    f"{new_cfg.uplink!r}, which flips the aggregation "
+                    f"domain (delta vs weight) — policies must keep every "
+                    f"tier in the configured domain")
+            self._swap_state(addr, self._up_enc_state,
+                             self.uplink_pipeline_for(addr), new_pipe,
+                             reset=decision.reset_state)
+            self._uplink_over[addr] = new_pipe
+        if "downlink" in changes:
+            if not self.downlink_pipeline.self_describing:
+                raise ValueError(
+                    "control policy renegotiated the downlink, but the "
+                    "base downlink is a legacy (headerless) codec — the "
+                    "client decodes those out-of-band and cannot follow "
+                    "an in-band swap")
+            new_down = parse_pipeline(new_cfg.downlink)
+            self._swap_state(addr, self._down_enc_state,
+                             self.downlink_pipeline_for(addr), new_down,
+                             reset=decision.reset_state)
+            self._down_over[addr] = (
+                new_down, Packetizer(pipeline=new_down, mtu=new_cfg.mtu))
+        self._cfg_over[addr] = new_cfg
+        self.renegotiations[addr] = self.renegotiations.get(addr, 0) + 1
+        return True
+
+    def _swap_state(self, addr: str, table: dict, old_pipe: Pipeline,
+                    new_pipe: Pipeline, *, reset: bool) -> None:
+        """Re-key one client's encoder state for a renegotiated pipeline:
+        migrate (EF residual / delta reference carry over) or reset."""
+        if reset:
+            state = new_pipe.new_state() if new_pipe.caps.stateful else None
+        else:
+            state = migrate_state(old_pipe, table.get(addr), new_pipe)
+        if state is None:
+            table.pop(addr, None)
+        else:
+            table[addr] = state
 
     # -- receiver plumbing ---------------------------------------------------
     def install_client_rx(self, client: FLClient) -> None:
@@ -459,6 +604,13 @@ class ServerCore:
         self.pool.remove(addr)
         self._up_enc_state.pop(addr, None)
         self._down_enc_state.pop(addr, None)
+        # Control-plane identity is per-address too: telemetry history,
+        # renegotiated overrides and counters all die with the client.
+        self.telemetry.forget(addr)
+        self._uplink_over.pop(addr, None)
+        self._down_over.pop(addr, None)
+        self._cfg_over.pop(addr, None)
+        self.renegotiations.pop(addr, None)
 
     # -- session management --------------------------------------------------
     def new_txn_pair(self) -> tuple[int, int]:
@@ -526,12 +678,17 @@ class ServerCore:
         downlink, e.g. ``ef|int8``, compensates each client separately —
         such pipelines bypass the broadcast cache)."""
         session.state = DOWNLINK
-        data = self.broadcast_payload()
+        packetizer = self.packetizer_for(session.addr)
+        # A renegotiated downlink encodes per client (its bytes differ
+        # from the broadcast), so it bypasses the cache without charging a
+        # spurious hit.
+        data = (self.broadcast_payload()
+                if session.addr not in self._down_over else None)
         if data is not None:
             packets = packetize(data, self.server_addr, session.txn_down,
-                                self.packetizer.mtu)
+                                packetizer.mtu)
         else:
-            packets = self.packetizer.to_packets(
+            packets = packetizer.to_packets(
                 self.global_params, self.server_addr, session.txn_down,
                 state=self.wire_state(session.addr, direction="downlink"))
         self._make_sender(self.server_node,
@@ -550,13 +707,14 @@ class ServerCore:
             if session is None or not self.scheduler.accept_downlink(session):
                 return
             if d.complete:
-                client.params = self.packetizer.from_packets(
-                    d.packets, self.global_params)
+                client.params = self.packetizer_for(
+                    client.addr).from_packets(d.packets, self.global_params)
             else:
                 # Best-effort downlink: the client trains on the zero-filled
                 # model (Delivery.complete makes the gap explicit instead of
                 # silently treating a partial broadcast as the full model).
-                vec = self.decode_vec(d.reassemble(), direction="downlink")
+                vec = self.decode_vec(d.reassemble(), direction="downlink",
+                                      addr=client.addr)
                 client.params = unflatten_from_vector(vec, self.global_params)
             self.begin_training_for(session)
         return _cb
@@ -609,11 +767,12 @@ class ServerCore:
         """Finish a training step: prime the uplink delta reference with
         the model the client trained *from* and ship the result.  Shared by
         the default timer path and topology train overrides."""
-        if self.uplink_pipeline.caps.delta_domain:
+        pipeline = self.uplink_pipeline_for(session.addr)
+        if pipeline.caps.delta_domain:
             # Prime the delta stage's reference: the model this client
             # just trained from.  The subtraction itself happens inside
             # the pipeline, not here.
-            self.uplink_pipeline.set_reference(
+            pipeline.set_reference(
                 self.wire_state(session.addr, direction="uplink"),
                 flatten_to_vector(received))
         self.send_update(session, new_params)
@@ -627,7 +786,7 @@ class ServerCore:
         session.state = UPLINK
         client = session.client
         vec = flatten_to_vector(payload_tree)
-        data = self.uplink_pipeline.encode(
+        data = self.uplink_pipeline_for(client.addr).encode(
             vec, self.wire_state(client.addr, direction="uplink"))
         packets = packetize(data, client.addr, session.txn_up,
                             self.packetizer.mtu)
@@ -635,12 +794,38 @@ class ServerCore:
         self._make_sender(node, self.server_node, packets, session).start()
 
     def _make_sender(self, src, dst, packets, session: ClientSession):
-        def _fail(sender) -> None:
+        addr = session.addr
+        payload_bytes = sum(len(p.payload) for p in packets)
+        n_packets = len(packets)
+
+        def _observe(sender, completed: bool) -> None:
+            # Telemetry feed: pure bookkeeping off the sender's TxnStats
+            # (every engine — per_packet, batched, flow — fills the same
+            # shape; getattr keeps third-party senders safe).  No events,
+            # no RNG, no sim.stats: recording cannot move a digest.
             self._note_retx(sender)
+            stats = getattr(sender, "stats", None)
+            now = self.sim.now_ns
+            start = getattr(stats, "start_ns", 0) if stats else 0
+            end = getattr(stats, "end_ns", 0) if stats else 0
+            duration = max(0, (end or now) - start) if start else 0
+            self.telemetry.observe_txn(
+                addr, now_ns=now, duration_ns=duration,
+                data_sent=(getattr(stats, "data_sent", 0) or n_packets)
+                if stats else n_packets,
+                retransmissions=getattr(stats, "retransmissions", 0)
+                if stats else 0,
+                payload_bytes=payload_bytes, completed=completed)
+
+        def _done(sender) -> None:
+            _observe(sender, True)
+
+        def _fail(sender) -> None:
+            _observe(sender, False)
             self.scheduler.on_session_failed(session)
         return self.transport.create_sender(
-            self.sim, src, dst, packets, self.cfg.transport,
-            on_complete=self._note_retx, on_fail=_fail)
+            self.sim, src, dst, packets, self.transport_cfg_for(addr),
+            on_complete=_done, on_fail=_fail)
 
     def _note_retx(self, sender) -> None:
         self.retx_total += getattr(sender.stats, "retransmissions", 0)
@@ -658,14 +843,14 @@ class ServerCore:
             # (async max_staleness) is never decoded, so a malformed one
             # no longer bumps decode_errors — it contributes nothing
             # either way.
-            vec: Any = _PendingWire(d.reassemble())
+            vec: Any = _PendingWire(d.reassemble(), d.sender_addr)
         else:
-            vec = self.decode_vec(d.reassemble())
+            vec = self.decode_vec(d.reassemble(), addr=d.sender_addr)
         session = self.uplink_session(d.sender_addr, d.txn)
         self.scheduler.on_uplink(session, d.sender_addr, d.txn, vec)
 
-    def decode_vec(self, data: bytes, *,
-                   direction: str = "uplink") -> np.ndarray:
+    def decode_vec(self, data: bytes, *, direction: str = "uplink",
+                   addr: Optional[str] = None) -> np.ndarray:
         """Decode a (possibly zero-filled) byte stream to a model-sized
         vector through the named direction's pipeline.
 
@@ -699,21 +884,34 @@ class ServerCore:
                 vec = pipeline.decode(data)
         except WireDecodeError:
             self.decode_errors += 1
+            if addr is not None:
+                self.telemetry.observe_decode_error(addr,
+                                                    now_ns=self.sim.now_ns)
             vec = np.zeros(n_expected, dtype=np.float32)
         if vec.size < n_expected:
             vec = np.concatenate(
                 [vec, np.zeros(n_expected - vec.size, dtype=np.float32)])
         return vec[:n_expected]
 
-    def decode_vec_batch(self, datas: list[bytes]) -> np.ndarray:
+    def decode_vec_batch(self, datas: list[bytes],
+                         addrs: Optional[list] = None) -> np.ndarray:
         """Batched :meth:`decode_vec` over uplink payloads: one ``(N,
         n_params)`` float32 matrix, row i bit-identical to
         ``decode_vec(datas[i])`` — including the per-item degradation
         contract: a malformed payload zero-fills *its* row and bumps
         ``decode_errors``; it never poisons the rest of the batch
-        (``decode_payload_batch`` isolates it via per-item fallback)."""
+        (``decode_payload_batch`` isolates it via per-item fallback).
+        ``addrs`` (parallel to ``datas``, entries may be None) attributes
+        degradations to the right client's telemetry."""
         n_expected = self.n_params
         pipeline = self.uplink_pipeline
+
+        def _degrade(i: int) -> None:
+            self.decode_errors += 1
+            if addrs is not None and addrs[i] is not None:
+                self.telemetry.observe_decode_error(
+                    addrs[i], now_ns=self.sim.now_ns)
+
         out = np.zeros((len(datas), n_expected), dtype=np.float32)
         if pipeline.self_describing:
             for i, (vec, negotiated, err) in enumerate(
@@ -725,7 +923,7 @@ class ServerCore:
                     # domain is degraded, not mis-aggregated.
                     vec = None
                 if vec is None:
-                    self.decode_errors += 1
+                    _degrade(i)
                     continue
                 m = min(vec.size, n_expected)
                 out[i, :m] = vec[:m]
@@ -734,7 +932,7 @@ class ServerCore:
             try:
                 vec = pipeline.decode(data)
             except WireDecodeError:
-                self.decode_errors += 1
+                _degrade(i)
                 continue
             m = min(vec.size, n_expected)
             out[i, :m] = vec[:m]
@@ -749,7 +947,8 @@ class ServerCore:
         pending = [v for v, _ in contribs
                    if isinstance(v, _PendingWire) and v.vec is None]
         if pending:
-            mat = self.decode_vec_batch([p.data for p in pending])
+            mat = self.decode_vec_batch([p.data for p in pending],
+                                        [p.addr for p in pending])
             for p, row in zip(pending, mat):
                 p.vec = row
                 p.data = None     # the bytes are dead weight once decoded

@@ -176,6 +176,8 @@ class StarTopology(Topology):
             mode=fleet.mode,
             buffer_k=fleet.buffer_k,
             batch_wire=fleet.batch_wire,
+            control=fleet.control,
+            control_args=fleet.control_args,
         )
         sim = Simulator(engine=fleet.engine)
         clients = []
@@ -447,6 +449,8 @@ class HierTopology(Topology):
             # in a window, so a star-calibrated buffer_k would stall.
             buffer_k=min(fleet.buffer_k, cells),
             batch_wire=fleet.batch_wire,
+            control=fleet.control,
+            control_args=fleet.control_args,
         )
         cell_transport = dataclasses.replace(
             base_t,
@@ -487,6 +491,11 @@ class HierTopology(Topology):
                 participation_seed=fleet.seed * 1009 + m + 1,
                 round_deadline_ns=fleet.round_deadline_ns,
                 batch_wire=fleet.batch_wire,
+                # Per-hop policies: each cell's ServerCore runs its own
+                # controller instance over its own clients' telemetry, and
+                # the root runs one over the edge uplinks (root_cfg above).
+                control=fleet.control,
+                control_args=fleet.control_args,
             )
             cell_clients = [
                 FLClient(p.addr, train_fn_factory(i, p),

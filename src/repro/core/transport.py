@@ -125,10 +125,16 @@ class TransportConfig:
     max_retries: int = 3                # the paper's Y
     udp_deadline_ns: int = 30_000_000_000
     fec_block: int = 8                  # mudp+fec: data packets per FEC block
-    fec_parity: int = 1                 # mudp+fec: parity packets per block
+    fec_parity: int = 1                 # mudp+fec: parity per block (0 = no
+                                        # trailer; degrades to plain mudp)
 
     def __post_init__(self) -> None:
         validate_transport_kind(self.kind)
+        if self.fec_block < 1:
+            raise ValueError(f"fec_block must be >= 1, got {self.fec_block}")
+        if self.fec_parity < 0:
+            raise ValueError(
+                f"fec_parity must be >= 0, got {self.fec_parity}")
         for direction, spec in (("uplink", self.uplink),
                                 ("downlink", self.downlink)):
             if spec is None:

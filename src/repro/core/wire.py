@@ -802,6 +802,108 @@ class HexStage(Stage):
 
 
 # --------------------------------------------------------------------------
+# Integrity stage: crc
+# --------------------------------------------------------------------------
+#: ChunkSum-32 weight period (repro.kernels.checksum.ref.WEIGHT_PERIOD,
+#: duplicated here so the wire plane never imports jax transitively).
+_CRC_WEIGHT_PERIOD = 8191
+
+
+def chunksum32(data: bytes) -> int:
+    """ChunkSum-32 over a byte string — the numpy twin of the
+    ``repro.kernels.checksum`` kernel (parity pinned in the kernel tests).
+
+    Every term is independent (weights are positional, not a running
+    prefix like Adler-32), so the per-row batch form below is a plain
+    vectorized reduction with identical results.
+    """
+    x = np.frombuffer(data, dtype=np.uint8)
+    if x.size == 0:
+        return 0
+    w = (np.arange(x.size, dtype=np.uint64) % _CRC_WEIGHT_PERIOD) + 1
+    xs = x.astype(np.uint64)
+    a = int(xs.sum(dtype=np.uint64)) & 0xFFFFFFFF
+    b = int((w * xs).sum(dtype=np.uint64)) & 0xFFFFFFFF
+    return (a & 0xFFFF) | ((b & 0xFFFF) << 16)
+
+
+def _chunksum32_rows(mat: np.ndarray) -> np.ndarray:
+    """Per-row :func:`chunksum32` over a contiguous 2-D array (any dtype:
+    rows are checksummed as their raw bytes)."""
+    mat = np.ascontiguousarray(mat)
+    rows = (mat.view(np.uint8).reshape(mat.shape[0], -1)
+            if mat.size else np.zeros((mat.shape[0], 0), dtype=np.uint8))
+    if rows.shape[1] == 0:
+        return np.zeros(rows.shape[0], dtype=np.uint64)
+    w = (np.arange(rows.shape[1], dtype=np.uint64)
+         % _CRC_WEIGHT_PERIOD) + 1
+    xs = rows.astype(np.uint64)
+    a = xs.sum(axis=1, dtype=np.uint64) & 0xFFFFFFFF
+    b = (xs * w).sum(axis=1, dtype=np.uint64) & 0xFFFFFFFF
+    return (a & 0xFFFF) | ((b & 0xFFFF) << 16)
+
+
+class CrcStage(Stage):
+    """End-to-end wire-body integrity: ChunkSum-32 in the header params.
+
+    Encode is the identity on the flowing array; the checksum of its
+    exact bytes rides as this stage's header params.  Decode re-checksums
+    the received body **before any other stage touches it** (it sits last
+    in the spec, so it runs first on the reversed decode walk) and raises
+    :class:`WireDecodeError` on mismatch — the FL layer's existing
+    zero-fill degradation then absorbs the corrupt payload.
+
+    Self-describing pipelines only (the checksum needs header params to
+    travel in); ``Pipeline`` validation pins it to the terminal position
+    because any later lossy stage would decode to different bytes than
+    were checksummed and fail every payload.
+    """
+
+    name = "crc"
+    lossless = True
+    stateful = False
+    est_ratio = 1.0
+    remaps_coordinates = False
+    legacy_codec = None
+
+    def encode(self, arr, slot):
+        arr = np.ascontiguousarray(arr)
+        return arr, _U32.pack(chunksum32(arr.tobytes()))
+
+    def decode(self, arr, params, slot):
+        if len(params) != 4:
+            raise WireDecodeError("crc params must be one u32 checksum")
+        want = _U32.unpack(params)[0]
+        got = chunksum32(np.ascontiguousarray(arr).tobytes())
+        if got != want:
+            raise WireDecodeError(f"crc mismatch: header 0x{want:08x}, "
+                                  f"body 0x{got:08x}")
+        return arr
+
+    batch_capable = True
+
+    def encode_batch(self, batch, slots):
+        batch = np.ascontiguousarray(batch)
+        if batch.ndim != 2:
+            raise WireError(f"stage 'crc' batch input must be 2-D (N, P), "
+                            f"got shape {batch.shape}")
+        return batch, [_U32.pack(int(s)) for s in _chunksum32_rows(batch)]
+
+    def decode_batch(self, arr, params, slots):
+        if not params:
+            return arr
+        if any(len(p) != 4 for p in params):
+            raise WireDecodeError("crc params must be one u32 checksum")
+        arr = np.ascontiguousarray(arr)
+        got = _chunksum32_rows(arr)
+        want = np.frombuffer(b"".join(params), dtype=">u4")
+        if got.size != want.size or not np.array_equal(
+                got, want.astype(np.uint64)):
+            raise WireDecodeError("crc mismatch in batch group")
+        return arr
+
+
+# --------------------------------------------------------------------------
 # Registry + spec parser (the transport-registry idiom)
 # --------------------------------------------------------------------------
 _STAGES: dict[str, Callable[..., Stage]] = {}
@@ -1048,6 +1150,13 @@ class Pipeline:
                 raise WireError("ef cannot wrap delta; order the spec "
                                 "'delta|ef|...' so the residual tracks "
                                 "only what the lossy tail dropped")
+        for s in stages[:-1]:
+            if isinstance(s, CrcStage):
+                # A later stage's decode need not reproduce the exact
+                # bytes crc checksummed (int8 dequantizes, topk scatters),
+                # so a non-terminal crc would fail every payload.
+                raise WireError("crc must be the terminal stage (it "
+                                "checksums the exact wire body)")
         self.stages = list(stages)
         self.self_describing = self_describing
         self.caps = PipelineCaps(self.stages)
@@ -1422,6 +1531,50 @@ class Pipeline:
 
 
 # --------------------------------------------------------------------------
+# State migration across renegotiated pipeline swaps
+# --------------------------------------------------------------------------
+def migrate_state(old: Pipeline, old_state: Optional[PipelineState],
+                  new: Pipeline) -> Optional[PipelineState]:
+    """Carry encoder state across a live pipeline renegotiation
+    (:mod:`repro.core.control`), under the rules in ``docs/CONTROL.md``:
+
+    * the first delta stage's reference (``slot["ref"]``) and the first
+      ef stage's residual (``slot["residual"]``) carry over — both live
+      in model coordinates (pipeline validation forces ef before any
+      remapping stage), so they stay meaningful whatever the tail
+      becomes;
+    * everything else resets (a stage's private state is only defined
+      under its own spec);
+    * returns None when the new pipeline is stateless.
+
+    The explicit-reset alternative (``ControlDecision.reset_state``) is
+    simply not calling this and taking ``new.new_state()``.
+    """
+    if not new.caps.stateful:
+        return None
+    state = new.new_state()
+    if old_state is None or len(old_state.slots) != len(old.stages):
+        return state
+
+    def _first(stages, pred):
+        for i, s in enumerate(stages):
+            if pred(s):
+                return i
+        return None
+
+    for key, pred in (("ref", lambda s: s.delta_domain),
+                      ("residual",
+                       lambda s: isinstance(s, ErrorFeedbackStage))):
+        i_old = _first(old.stages, pred)
+        i_new = _first(new.stages, pred)
+        if i_old is not None and i_new is not None:
+            val = old_state.slots[i_old].get(key)
+            if val is not None:
+                state.slots[i_new][key] = val
+    return state
+
+
+# --------------------------------------------------------------------------
 # Wire negotiation: decode from the header alone
 # --------------------------------------------------------------------------
 # Negotiation sits on the per-delivery hot path: memoize spec -> Pipeline
@@ -1637,3 +1790,4 @@ register_stage("topk", TopKStage)
 register_stage("int8", Int8Stage)
 register_stage("raw", RawStage)
 register_stage("hex", HexStage)
+register_stage("crc", CrcStage)

@@ -165,3 +165,53 @@ def test_fleet_distributional_equivalence(transport, topology):
                                          topology=topology), SEEDS_FLEET)
     fails = compare_sweeps(ref, flow, FLEET_TOLS)
     assert not fails, "\n".join(fails)
+
+
+# --------------------------------------------------------------------------
+# Telemetry under the flow engine (repro.core.telemetry)
+# --------------------------------------------------------------------------
+def _telemetry_metrics(engine: str, seed: int) -> dict:
+    """Fleet-averaged ClientHealth EWMAs after a short lte-cohort run: the
+    flow engine feeds the same telemetry plane through the same TxnStats
+    shape, so the per-client estimators must agree distributionally."""
+    from repro.core import (ConsensusObjective, FLConfig, FleetConfig,
+                            TransportConfig, build_fleet)
+    NS = 1_000_000_000
+    n_clients = 16
+    fleet = FleetConfig(n_clients=n_clients, seed=seed, engine=engine,
+                        cohort_mix=(("lte", 1.0),),
+                        round_deadline_ns=60 * NS)
+    objective = ConsensusObjective(n_clients, 512, seed=seed)
+    cfg = FLConfig(transport=TransportConfig(kind="mudp", timeout_ns=2 * NS,
+                                             udp_deadline_ns=3 * NS))
+    _, system, _ = build_fleet(fleet, objective.init_params(),
+                               objective.train_fn, cfg)
+    system.run_rounds(3)
+    health = system.core.telemetry.snapshot_all().values()
+    n = max(1, len(health))
+    return {
+        "txns": sum(h.txns for h in health) / n,
+        "rtt_ns": sum(h.rtt_ns for h in health) / n,
+        "loss_rate": sum(h.loss_rate for h in health) / n,
+        "goodput_bps": sum(h.goodput_bps for h in health) / n,
+    }
+
+
+# rtt/goodput variance is straggler-dominated (one slow draw owns the
+# fleet mean), so those gate on means; the loss-rate EWMA at lte loss
+# levels is a rare-event average and needs an absolute floor.
+TELEMETRY_TOLS = {
+    "txns": Tolerance(mean_rtol=0.0),
+    "rtt_ns": Tolerance(mean_rtol=0.20, var_hi=None, var_lo=None),
+    "loss_rate": Tolerance(mean_rtol=0.5, mean_atol=0.01,
+                           var_hi=None, var_lo=None),
+    "goodput_bps": Tolerance(mean_rtol=0.25, var_hi=None, var_lo=None),
+}
+
+
+@pytest.mark.stats
+def test_flow_telemetry_distributional_equivalence():
+    ref = sweep(lambda s: _telemetry_metrics("batched", s), SEEDS_FLEET)
+    flow = sweep(lambda s: _telemetry_metrics("flow", s), SEEDS_FLEET)
+    fails = compare_sweeps(ref, flow, TELEMETRY_TOLS)
+    assert not fails, "\n".join(fails)

@@ -52,6 +52,8 @@ NEGOTIATION_SPECS = [
     "topk(0.1)|int8(64)",
     "delta|ef|topk(0.01)|int8(1024)",
     "int8(128)|hex",
+    "int8(256)|crc",
+    "delta|ef|topk(0.05)|int8(512)|crc",
 ]
 
 

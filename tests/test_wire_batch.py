@@ -54,6 +54,8 @@ BATCH_SPECS = [
     "int8(128)|hex",
     "ef|int8(64)",
     "delta|ef|topk(0.1)|hex",
+    "int8(256)|crc",
+    "delta|ef|topk(0.1)|int8(512)|crc",
 ]
 
 
